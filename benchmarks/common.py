@@ -1,0 +1,22 @@
+"""Shared benchmark helpers + the CSV emission contract:
+every benchmark prints ``name,us_per_call,derived`` lines."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_call(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
+    for _ in range(warmup):
+        fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args, **kw)
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6

@@ -1,0 +1,56 @@
+"""Figures 8-11: per-(dataset x query) comparison — RADS vs PSgL vs
+TwinTwig vs SEED vs Crystal-lite. Metrics: wall time, communication volume
+(RADS: fetchV+verifyE bytes; baselines: shuffled intermediate bytes — the
+paper's headline axis), and peak intermediate rows (memory robustness)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.rads import DEFAULT_ENGINE, EngineConfig, QUERIES
+from repro.core import Pattern, rads_enumerate
+from repro.core.baselines import (build_triangle_index, crystal_lite,
+                                  join_enumerate, psgl_enumerate)
+from repro.graph import load_dataset, partition
+
+CFG = EngineConfig(frontier_cap=1 << 13, fetch_cap=1 << 10, verify_cap=1 << 12,
+                   region_group_budget=1 << 12)
+
+
+def run(datasets=("dblp_bench", "roadnet_bench", "livejournal_bench",
+                  "uk2002_bench"),
+        queries=("q1", "q2"), ndev: int = 4):
+    for ds in datasets:
+        g = load_dataset(ds)
+        pg = partition(g, ndev, method="bfs")
+        tri = build_triangle_index(g)
+        # denser stand-ins run the triangle only (CPU bench budget; the
+        # multi-round queries are covered on dblp/roadnet + in tests)
+        qs = queries if ds in ("dblp_bench", "roadnet_bench") else ("q1",)
+        for q in qs:
+            pat = Pattern.from_edges(QUERIES[q])
+            t0 = time.perf_counter()
+            r = rads_enumerate(pg, pat, CFG, mode="sim",
+                               return_embeddings=False)
+            t_rads = (time.perf_counter() - t0) * 1e6
+            rads_bytes = r.stats["bytes_fetch"] + r.stats["bytes_verify"]
+            emit(f"enum/{ds}/{q}/rads", t_rads,
+                 f"count={r.count};comm_bytes={rads_bytes:.0f};"
+                 f"sme={r.stats['n_sme_seeds']}")
+            p = psgl_enumerate(pg, pat, return_embeddings=False)
+            emit(f"enum/{ds}/{q}/psgl", p.seconds * 1e6,
+                 f"count={p.count};comm_bytes={p.bytes_shuffled:.0f};"
+                 f"peak_rows={p.peak_rows}")
+            for kind in ("twintwig", "seed"):
+                j = join_enumerate(pg, pat, kind, return_embeddings=False)
+                emit(f"enum/{ds}/{q}/{kind}", j.seconds * 1e6,
+                     f"count={j.count};comm_bytes={j.bytes_shuffled:.0f};"
+                     f"peak_rows={j.peak_rows}")
+            c = crystal_lite(pg, pat, g, tri_index=tri,
+                             return_embeddings=False)
+            emit(f"enum/{ds}/{q}/crystal", c.seconds * 1e6,
+                 f"count={c.count};index_bytes={c.extra['index_bytes']}")
+            counts = {r.count, p.count, c.count}
+            assert len(counts) == 1, f"count mismatch {ds}/{q}: {counts}"

@@ -1,0 +1,50 @@
+"""Kernel micro-benchmarks. On this CPU container the timed path is the
+jnp/XLA reference (Pallas interpret mode is a Python emulator — correctness
+only); the Pallas kernels are timed on real TPUs by the same harness."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.kernels.flash_attn.ops import flash_attention_k
+from repro.kernels.membership.ops import membership
+from repro.kernels.moe_gemm.ops import moe_gemm
+from repro.kernels.segment_spmm.ops import segment_spmm
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+
+    rows = jnp.sort(jax.random.randint(key, (4096, 64), 0, 100000), axis=1)
+    vals = jax.random.randint(key, (4096, 16), 0, 100000)
+    us = time_call(lambda: membership(rows, vals).block_until_ready())
+    emit("kernel/membership/4096x64x16", us,
+         f"checks_per_s={4096*16/us*1e6:.3e}")
+
+    B, S, H, Hk, D = 1, 2048, 8, 2, 64
+    q = jax.random.normal(key, (B, S, H, D), jnp.bfloat16)
+    k = jax.random.normal(key, (B, S, Hk, D), jnp.bfloat16)
+    v = jax.random.normal(key, (B, S, Hk, D), jnp.bfloat16)
+    us = time_call(lambda: flash_attention_k(
+        q, k, v, use_kernel=False).block_until_ready())
+    fl = 2 * B * H * S * S * D * 2 / 2
+    emit("kernel/flash_attn/2048", us, f"gflops={fl/us/1e3:.1f}")
+
+    E, C, d, f = 8, 256, 512, 1024
+    x = jax.random.normal(key, (E, C, d), jnp.bfloat16)
+    wg = jax.random.normal(key, (E, d, f), jnp.bfloat16) * 0.05
+    wu = jax.random.normal(key, (E, d, f), jnp.bfloat16) * 0.05
+    wd = jax.random.normal(key, (E, f, d), jnp.bfloat16) * 0.05
+    us = time_call(lambda: moe_gemm(x, wg, wu, wd,
+                                    use_kernel=False).block_until_ready())
+    fl = E * C * d * f * 3 * 2
+    emit("kernel/moe_gemm/8x256x512x1024", us, f"gflops={fl/us/1e3:.1f}")
+
+    Eg, N, Dg = 100000, 8192, 128
+    msgs = jax.random.normal(key, (Eg, Dg), jnp.float32)
+    dst = jax.random.randint(key, (Eg,), 0, N)
+    us = time_call(lambda: segment_spmm(msgs, dst, N).block_until_ready())
+    emit("kernel/segment_spmm/100k_edges", us,
+         f"gbytes_per_s={Eg*Dg*4/us/1e3:.2f}")

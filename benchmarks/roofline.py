@@ -1,0 +1,87 @@
+"""§Roofline: derive the three roofline terms per (arch x shape x mesh) from
+the dry-run artifacts (memory/cost/collective analysis of the compiled
+SPMD module).
+
+  compute term    = HLO_flops_per_dev / peak_FLOPs
+  memory term     = HLO_bytes_per_dev / HBM_bw
+  collective term = collective_bytes_per_dev / link_bw
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+cost_analysis() of the partitioned module is per-device; collective bytes
+are parsed from the compiled HLO (output-buffer bytes of each collective).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+from repro.utils import load_json
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ARTIFACT_DIR = os.environ.get(
+    "DRYRUN_ARTIFACTS",
+    os.path.join(os.path.dirname(__file__), "..", "experiments", "artifacts"))
+
+
+def terms(rec: dict) -> dict | None:
+    """Three roofline terms with the scan-trip correction.
+
+    XLA's cost model counts while-loop (scan) bodies once; scanned models
+    execute them ``scan_trip`` (= n_layers) times (calibrated:
+    EXPERIMENTS.md §Roofline notes). Corrections applied:
+      flops   -> max(HLO flops, analytic model flops / ndev) — the analytic
+                 6ND/2ND count is a lower bound immune to the undercount;
+      coll    -> entry-computation bytes + region (loop-body) bytes x trip;
+      memory  -> HLO bytes_accessed with the same trip scaling for the
+                 scanned fraction approximated via temp traffic (reported
+                 raw + corrected)."""
+    if not rec.get("ok"):
+        return None
+    trip = int(rec.get("meta", {}).get("scan_trip", 1) or 1)
+    flops_raw = rec["cost"].get("flops", 0.0)
+    bytes_raw = rec["cost"].get("bytes_accessed", 0.0)
+    coll = rec["collectives"]
+    in_reg = coll.get("in_regions", 0)
+    coll_corr = coll["total"] + in_reg * (trip - 1)
+    model_fl = rec.get("meta", {}).get("model_flops", 0)
+    ndev = rec.get("n_devices", 256)
+    flops_eff = max(flops_raw, model_fl / ndev)
+    bytes_eff = bytes_raw * (trip if flops_raw * trip <= flops_eff * 1.5
+                             else 1)
+    t_comp = flops_eff / PEAK_FLOPS
+    t_mem = bytes_eff / HBM_BW
+    t_coll = coll_corr / LINK_BW
+    dom = max(("compute", t_comp), ("memory", t_mem),
+              ("collective", t_coll), key=lambda kv: kv[1])
+    useful = (model_fl / ndev) / flops_eff if flops_eff else 0.0
+    bound = max(t_comp, t_mem, t_coll)
+    frac = ((model_fl / ndev) / PEAK_FLOPS) / bound if bound else 0.0
+    return dict(t_compute=t_comp, t_memory=t_mem, t_collective=t_coll,
+                dominant=dom[0], bound_s=bound, useful_flops_frac=useful,
+                roofline_frac=frac, coll_corrected=coll_corr,
+                flops_eff=flops_eff)
+
+
+def run(mesh: str = "single"):
+    files = sorted(glob.glob(os.path.join(ARTIFACT_DIR,
+                                          f"dryrun_*_{mesh}.json")))
+    files += sorted(glob.glob(os.path.join(ARTIFACT_DIR,
+                                           f"dryrun_*_{mesh}_opt.json")))
+    for f in files:
+        rec = load_json(f)
+        t = terms(rec)
+        var = rec.get("variant", "baseline")
+        name = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}/{var}"
+        if t is None:
+            emit(name, 0.0, "FAILED")
+            continue
+        emit(name, t["bound_s"] * 1e6,
+             f"dom={t['dominant']};comp_s={t['t_compute']:.2e};"
+             f"mem_s={t['t_memory']:.2e};coll_s={t['t_collective']:.2e};"
+             f"useful={t['useful_flops_frac']:.2f};"
+             f"roofline_frac={t['roofline_frac']:.3f}")

@@ -1,0 +1,33 @@
+"""Figure 12: scalability — vary machine count, report the paper's
+scalability ratio plus per-device balance. Wall-clock on this container is
+single-CPU simulation, so the scalable quantities are (a) max-per-device
+communication and (b) seed balance after work stealing."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.configs.rads import EngineConfig, QUERIES
+from repro.core import Pattern, rads_enumerate
+from repro.graph import load_dataset, partition
+
+CFG = EngineConfig(frontier_cap=1 << 13, fetch_cap=1 << 10,
+                   verify_cap=1 << 12, region_group_budget=1 << 12)
+
+
+def run(dataset="dblp_bench", query="q1", ndevs=(2, 4, 8)):
+    g = load_dataset(dataset)
+    pat = Pattern.from_edges(QUERIES[query])
+    base = None
+    for nd in ndevs:
+        pg = partition(g, nd, method="bfs")
+        t0 = time.perf_counter()
+        r = rads_enumerate(pg, pat, CFG, mode="sim", return_embeddings=False)
+        us = (time.perf_counter() - t0) * 1e6
+        comm = r.stats["bytes_fetch"] + r.stats["bytes_verify"]
+        if base is None:
+            base = comm if comm else 1.0
+        emit(f"scale/{dataset}/{query}/ndev{nd}", us,
+             f"count={r.count};comm_bytes={comm:.0f};"
+             f"comm_ratio={comm/base:.2f};sme={r.stats['n_sme_seeds']};"
+             f"dist={r.stats['n_dist_seeds']}")

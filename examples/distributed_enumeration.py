@@ -1,0 +1,44 @@
+"""End-to-end distributed driver (the paper's kind of workload): run the
+R-Meef engine in true SPMD mode over 8 devices — real ``all_to_all``
+fetchV/verifyE under shard_map — and validate against the single-machine
+oracle. Re-execs itself with forced host devices.
+
+    PYTHONPATH=src python examples/distributed_enumeration.py
+"""
+import os
+import sys
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.execv(sys.executable, [sys.executable] + sys.argv)
+
+import time
+
+import jax
+
+from repro.configs.rads import EngineConfig, QUERIES
+from repro.core import Pattern, canonicalize, enumerate_oracle, rads_enumerate
+from repro.graph import load_dataset, partition
+from repro.launch.mesh import make_engine_mesh
+
+NDEV = 8
+print(f"devices: {jax.devices()}")
+mesh = make_engine_mesh(NDEV)
+g = load_dataset("dblp_bench")
+pg = partition(g, NDEV, method="bfs")
+cfg = EngineConfig(frontier_cap=1 << 14, fetch_cap=1 << 10,
+                   verify_cap=1 << 12, region_group_budget=1 << 13)
+
+for qname in ("q1", "q3"):
+    pattern = Pattern.from_edges(QUERIES[qname])
+    t0 = time.perf_counter()
+    res = rads_enumerate(pg, pattern, cfg, mode="spmd", mesh=mesh)
+    dt = time.perf_counter() - t0
+    oracle = canonicalize(enumerate_oracle(g, pattern), pattern)
+    ok = canonicalize(res.embeddings, pattern) == oracle
+    st = res.stats
+    print(f"{qname}: {res.count} embeddings in {dt:.1f}s on {NDEV} devices "
+          f"| oracle match: {ok} | fetchV {st['bytes_fetch']/1e3:.1f}KB "
+          f"verifyE {st['bytes_verify']/1e3:.1f}KB | groups {st['n_groups']}")
+    assert ok
+print("distributed enumeration verified against oracle.")

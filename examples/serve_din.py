@@ -1,0 +1,67 @@
+"""Serve a DIN CTR model with batched requests: brief training on the
+planted-signal stream, then batched online scoring + top-k retrieval
+against a candidate set — the recsys serving shapes in miniature.
+
+    PYTHONPATH=src python examples/serve_din.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.data import din_batch_stream
+from repro.models.recsys import (DINBatch, din_logits, din_loss, init_din,
+                                 retrieval_scores)
+from repro.optim import AdamWConfig, adamw_update, init_opt_state
+
+cfg = get_reduced("din")
+params = init_din(jax.random.PRNGKey(0), cfg)
+opt = AdamWConfig(lr=2e-3, warmup_steps=10, total_steps=300,
+                  weight_decay=0.0)
+state = init_opt_state(params, opt)
+
+
+def to_batch(d):
+    return DINBatch(**{k: jnp.asarray(v) for k, v in d.items()})
+
+
+@jax.jit
+def train_step(params, state, batch):
+    loss, g = jax.value_and_grad(lambda p: din_loss(p, cfg, batch))(params)
+    params, state, _ = adamw_update(params, g, state, opt)
+    return params, state, loss
+
+
+stream = din_batch_stream(cfg.n_items, cfg.n_cates, cfg.n_user_feats,
+                          batch=256, seq_len=cfg.seq_len, seed=0)
+for i, d in enumerate(stream):
+    params, state, loss = train_step(params, state, to_batch(d))
+    if i == 0 or (i + 1) % 100 == 0:
+        print(f"train step {i+1}: loss {float(loss):.4f}")
+    if i >= 299:
+        break
+
+# --- batched online serving (serve_p99 shape in miniature) --------------- #
+serve = jax.jit(lambda p, b: jax.nn.sigmoid(din_logits(p, cfg, b)))
+test = to_batch(next(iter(din_batch_stream(
+    cfg.n_items, cfg.n_cates, cfg.n_user_feats, batch=512,
+    seq_len=cfg.seq_len, seed=999))))
+t0 = time.perf_counter()
+scores = serve(params, test).block_until_ready()
+lat = (time.perf_counter() - t0) * 1e3
+auc_pairs = 0
+pos = np.asarray(scores)[np.asarray(test.labels) > 0.5]
+neg = np.asarray(scores)[np.asarray(test.labels) < 0.5]
+auc = float((pos[:, None] > neg[None, :]).mean()) if len(pos) and len(neg) else 0.5
+print(f"serve: batch=512 in {lat:.1f}ms | AUC {auc:.3f}")
+assert auc > 0.65, "CTR model failed to learn the planted signal"
+
+# --- retrieval: score 1 user against 100k candidates in one dot ---------- #
+cand = jnp.arange(100_000) % cfg.n_items
+t0 = time.perf_counter()
+sc = retrieval_scores(params, cfg, test, cand, cand % cfg.n_cates)
+topk = jax.lax.top_k(sc[0], 10)[1].block_until_ready()
+print(f"retrieval: 100k candidates scored + top-10 in "
+      f"{(time.perf_counter()-t0)*1e3:.1f}ms; top ids {np.asarray(topk)[:5]}")

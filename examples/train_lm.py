@@ -1,0 +1,42 @@
+"""Train a small qwen-style LM end to end on the synthetic-but-learnable
+token stream: full production stack (AdamW + schedule, async checkpoints,
+fault injection mid-run, bit-exact recovery). Loss must fall.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 120]
+"""
+import argparse
+import dataclasses
+import shutil
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.data import Prefetcher, lm_token_stream
+from repro.models.transformer import init_lm_params, lm_loss
+from repro.optim import AdamWConfig
+from repro.runtime import FaultInjector, Trainer, TrainerConfig
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=120)
+args = ap.parse_args()
+
+cfg = dataclasses.replace(get_reduced("qwen3-4b"), d_model=128, n_layers=3,
+                          vocab=512)
+print(f"model: {cfg.n_layers}L d={cfg.d_model} vocab={cfg.vocab} "
+      f"(~{cfg.param_count()/1e6:.2f}M params)")
+params = init_lm_params(jax.random.PRNGKey(0), cfg)
+loss_fn = lambda p, b: lm_loss(p, cfg, jnp.asarray(b["tokens"]),
+                               jnp.asarray(b["labels"]))
+shutil.rmtree("/tmp/repro_example_lm", ignore_errors=True)
+tr = Trainer(loss_fn, params,
+             AdamWConfig(lr=2e-3, warmup_steps=10, total_steps=args.steps),
+             TrainerConfig(ckpt_dir="/tmp/repro_example_lm", ckpt_every=25,
+                           log_every=20))
+data = Prefetcher(lm_token_stream(cfg.vocab, 16, 64, seed=1))
+# inject a fault mid-run: the trainer restores from the async checkpoint
+# and replays — final losses are bit-identical to an uninterrupted run
+hist = tr.run(data, args.steps, fault=FaultInjector(fail_at={60}))
+print(f"loss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} "
+      f"(fault at step 60 recovered transparently)")
+assert hist[-1]["loss"] < hist[0]["loss"] - 0.5, "model failed to learn"

@@ -1,0 +1,53 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``get_reduced(arch_id)``.
+
+Assigned archs (10) + the paper's own engine config live here.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (ArchConfig, GNNConfig, MLAConfig, MoEConfig,
+                                RecsysConfig, ShapeSpec, TransformerConfig)
+
+_ARCH_MODULES: dict[str, str] = {
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "qwen1.5-0.5b": "repro.configs.qwen15_05b",
+    "qwen3-14b": "repro.configs.qwen3_14b",
+    "qwen3-4b": "repro.configs.qwen3_4b",
+    "graphcast": "repro.configs.graphcast",
+    "schnet": "repro.configs.schnet",
+    "pna": "repro.configs.pna",
+    "gat-cora": "repro.configs.gat_cora",
+    "din": "repro.configs.din",
+}
+
+ARCH_IDS: tuple[str, ...] = tuple(_ARCH_MODULES)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; available: {list(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch_id]).CONFIG
+
+
+def get_reduced(arch_id: str):
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; available: {list(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch_id]).reduced()
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """Every (arch_id, shape_name) cell — 40 total."""
+    cells = []
+    for a in ARCH_IDS:
+        for s in get_config(a).shapes:
+            cells.append((a, s.name))
+    return cells
+
+
+__all__ = [
+    "ArchConfig", "TransformerConfig", "GNNConfig", "RecsysConfig",
+    "MoEConfig", "MLAConfig", "ShapeSpec",
+    "ARCH_IDS", "get_config", "get_reduced", "all_cells",
+]

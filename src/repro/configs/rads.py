@@ -1,0 +1,71 @@
+"""Config for the paper's own workload: distributed subgraph enumeration.
+
+Defines the engine knobs (capacities, region-group budget, caching) and the
+synthetic stand-ins for the paper's four datasets (offline container — see
+DESIGN.md §5) plus the q1..q8 / qc1..qc4 query sets.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """RADS / R-Meef engine knobs (all static — JAX shapes)."""
+
+    frontier_cap: int = 1 << 16        # max live partial embeddings per device
+    max_degree: int = 64               # padded adjacency window for expansion
+    fetch_cap: int = 1 << 12           # max foreign-vertex fetches per round/peer
+    verify_cap: int = 1 << 14          # max undetermined-edge queries per round/peer
+    region_group_budget: int = 1 << 14 # memory-control target: est. trie nodes/group
+    enable_sme: bool = True            # SM-E local/distributed split (Prop. 1)
+    enable_cache: bool = True          # foreign adjacency cache
+    cache_slots: int = 1 << 12         # direct-mapped cache rows
+    enable_work_stealing: bool = True  # checkR/shareR analogue (seed rebalance)
+    plan_rho: float = 1.0              # score-function exponent (paper uses 1)
+    seed: int = 0
+
+
+# dataset stand-ins: name -> generator kwargs (see graph/generators.py)
+DATASETS: dict[str, dict] = {
+    # sparse, huge diameter (RoadNet-like): 2-D lattice with perturbation
+    "roadnet_synth": dict(kind="road", n=4096),
+    # small, moderately dense, community structure (DBLP-like)
+    "dblp_synth": dict(kind="powerlaw", n=2000, avg_deg=7, seed=1),
+    # dense social graph (LiveJournal-like)
+    "livejournal_synth": dict(kind="powerlaw", n=6000, avg_deg=18, seed=2),
+    # densest web graph (UK2002-like)
+    "uk2002_synth": dict(kind="powerlaw", n=8000, avg_deg=32, seed=3),
+    # CPU-container benchmark sizes (same shape characteristics, small n —
+    # the tee'd bench must finish in minutes on one CPU; the full-size
+    # stand-ins above are exercised by tests/examples on demand)
+    "dblp_bench": dict(kind="powerlaw", n=700, avg_deg=6, seed=1),
+    "roadnet_bench": dict(kind="road", n=2304),
+    "livejournal_bench": dict(kind="powerlaw", n=900, avg_deg=10, seed=2),
+    "uk2002_bench": dict(kind="powerlaw", n=1100, avg_deg=14, seed=3),
+}
+
+# Query patterns, edge lists over vertices 0..k-1 (unlabeled, undirected,
+# connected) — recreated at the paper's 3-6 vertex scale (Figure 7).
+QUERIES: dict[str, list[tuple[int, int]]] = {
+    "q1": [(0, 1), (1, 2), (0, 2)],                                   # triangle
+    "q2": [(0, 1), (1, 2), (2, 3), (0, 3)],                           # square
+    "q3": [(0, 1), (1, 2), (2, 3), (0, 3), (0, 2)],                   # diamond
+    "q4": [(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)],           # 4-clique
+    "q5": [(0, 1), (1, 2), (2, 3), (0, 3), (0, 2), (3, 4)],           # diamond+tail
+    "q6": [(0, 1), (1, 2), (2, 3), (3, 4), (0, 4), (0, 2)],           # house
+    "q7": [(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (0, 5), (0, 3)],   # 6-cycle+chord
+    "q8": [(0, 1), (0, 2), (0, 3), (1, 2), (3, 4), (3, 5)],           # tri + star
+}
+
+# clique-heavy set (Appendix C.4, Figure 14)
+CLIQUE_QUERIES: dict[str, list[tuple[int, int]]] = {
+    "qc1": [(0, 1), (0, 2), (1, 2), (2, 3), (3, 4), (2, 4)],          # two triangles
+    "qc2": [(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3), (3, 4)],  # 4clique+tail
+    "qc3": [(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3),
+            (2, 4), (3, 4)],                                          # 4clique+tri
+    "qc4": [(0, 1), (0, 2), (1, 2), (1, 3), (2, 3), (2, 4), (3, 4),
+            (0, 4)],                                                  # dense 5v
+}
+
+DEFAULT_ENGINE = EngineConfig()

@@ -1,0 +1,23 @@
+"""The paper's primary contribution: RADS / R-Meef distributed subgraph
+enumeration — planner, engines, trie, region groups, baselines."""
+from repro.core.query import Pattern
+from repro.core.plan import (Plan, Unit, best_plan, enumerate_plans,
+                             minimum_cds, bfs_fallback_plan,
+                             random_star_plan, min_rounds_unscored_plan,
+                             compute_matching_order)
+from repro.core.engine import (PlanData, build_plan_data, run_rounds,
+                               graph_device_arrays, GraphMeta)
+from repro.core.driver import rads_enumerate, EnumerationResult
+from repro.core.oracle import enumerate_oracle, count_oracle, canonicalize
+from repro.core.trie import EmbeddingTrie, compression_report
+from repro.core.region import make_region_groups, proximity_groups
+from repro.core.exchange import Exchange
+
+__all__ = [
+    "Pattern", "Plan", "Unit", "best_plan", "enumerate_plans", "minimum_cds",
+    "bfs_fallback_plan", "random_star_plan", "min_rounds_unscored_plan",
+    "compute_matching_order", "PlanData", "build_plan_data", "run_rounds",
+    "graph_device_arrays", "GraphMeta", "rads_enumerate", "EnumerationResult",
+    "enumerate_oracle", "count_oracle", "canonicalize", "EmbeddingTrie",
+    "compression_report", "make_region_groups", "proximity_groups", "Exchange",
+]

@@ -1,0 +1,367 @@
+"""R-Meef: region-grouped multi-round expand, verify & filter (§3, App. B).
+
+One vectorized, static-shape engine serves four roles:
+
+* **SM-E** (``local_only=True``): the paper's single-machine pass over seeds
+  whose border distance >= span(u_start) (Prop. 1) — no collectives at all.
+* **Distributed R-Meef** (``local_only=False``): per unit (= round),
+  ``fetchV`` (batched foreign-adjacency fetch with dedup) then per-leaf
+  expansion with local verification, then one batched ``verifyE`` exchange
+  over the EVI (deduped undetermined edges; Def. 5, Prop. 2).
+* the **reference** mode (``Exchange('sim')``) on one device, and
+* the **production** mode (``Exchange('spmd', mesh)``) where the leading
+  ``ndev`` axis is sharded over the mesh and exchanges are ``all_to_all``.
+
+All shapes are static: capacities come from ``EngineConfig``; every overflow
+is *detected and flagged*, and the driver reacts by splitting region groups
+(§6 memory control — robustness mechanism, not an error path).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.rads import EngineConfig
+from repro.core.exchange import (Exchange, compact, membership, unique_ids,
+                                 unique_pairs)
+from repro.core.plan import Plan
+from repro.graph.storage import PartitionedGraph
+
+
+# --------------------------------------------------------------------------- #
+# Static plan data
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class StepSpec:
+    col: int                      # column this leaf writes (matching order)
+    piv_col: int
+    unit_idx: int
+    leaf: int                     # query vertex id
+    leaf_deg: int                 # degree filter
+    back_cols: tuple[int, ...]    # earlier cols with an edge to leaf (no pivot)
+    sym_lt_cols: tuple[int, ...]  # require rows[:, c] <  cand
+    sym_gt_cols: tuple[int, ...]  # require cand < rows[:, c]
+
+
+@dataclass(frozen=True)
+class PlanData:
+    order: tuple[int, ...]
+    col_of: tuple[int, ...]                  # query vertex -> column
+    steps: tuple[StepSpec, ...]
+    unit_piv_cols: tuple[int, ...]
+    unit_steps: tuple[tuple[int, ...], ...]  # step indices per unit
+    start_deg: int
+    u_start: int
+    span_start: int
+
+
+def build_plan_data(plan: Plan) -> PlanData:
+    p = plan.pattern
+    order = plan.matching_order
+    assert order, "plan must carry a matching order (use best_plan)"
+    col_of = [0] * p.n
+    for i, u in enumerate(order):
+        col_of[u] = i
+    cons = p.symmetry_constraints()
+    steps: list[StepSpec] = []
+    unit_piv_cols: list[int] = []
+    unit_steps: list[tuple[int, ...]] = []
+    placed = {order[0]}
+    for ui, unit in enumerate(plan.units):
+        piv_col = col_of[unit.piv]
+        unit_piv_cols.append(piv_col)
+        sids: list[int] = []
+        for lf in sorted(unit.leaves, key=lambda v: col_of[v]):
+            back = tuple(col_of[w] for w in p.adj(lf)
+                         if w in placed and w != unit.piv)
+            lt = tuple(col_of[a] for (a, b) in cons if b == lf and a in placed)
+            gt = tuple(col_of[b] for (a, b) in cons if a == lf and b in placed)
+            steps.append(StepSpec(col=col_of[lf], piv_col=piv_col,
+                                  unit_idx=ui, leaf=lf,
+                                  leaf_deg=p.degree(lf), back_cols=back,
+                                  sym_lt_cols=lt, sym_gt_cols=gt))
+            sids.append(len(steps) - 1)
+            placed.add(lf)
+        unit_steps.append(tuple(sids))
+    return PlanData(order=order, col_of=tuple(col_of), steps=tuple(steps),
+                    unit_piv_cols=tuple(unit_piv_cols),
+                    unit_steps=tuple(unit_steps),
+                    start_deg=p.degree(order[0]), u_start=order[0],
+                    span_start=p.span(order[0]))
+
+
+# --------------------------------------------------------------------------- #
+# Device graph data
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class GraphMeta:
+    ndev: int
+    stride: int
+    n: int            # sentinel == n
+    max_degree: int
+
+
+def graph_device_arrays(pg: PartitionedGraph):
+    meta = GraphMeta(ndev=pg.ndev, stride=pg.stride, n=pg.n,
+                     max_degree=pg.max_degree)
+    return jnp.asarray(pg.adj), jnp.asarray(pg.deg), meta
+
+
+# --------------------------------------------------------------------------- #
+# fetchV / verifyE exchanges
+# --------------------------------------------------------------------------- #
+def _per_peer_compact(ids, mask, owners, ndev: int, cap_out: int, fill: int):
+    """Split a sorted id list into per-peer request buffers (ndev, cap_out).
+    Returns (reqs, counts, overflow); order within a peer stays sorted."""
+    def one_peer(p):
+        m = mask & (owners == p)
+        _, ov, out = compact(m, cap_out, ids, fill=fill)
+        return out, m.sum(), ov
+
+    reqs, counts, ovs = jax.vmap(one_peer)(jnp.arange(ndev))
+    return reqs, counts, jnp.any(ovs)
+
+
+def fetch_exchange(adj, meta: GraphMeta, exch: Exchange,
+                   pivots, need, fcap: int):
+    """Batched fetchV (§3.2 Expand): dedup foreign pivot ids, exchange,
+    answer with local adjacency rows, exchange back.
+
+    pivots/need: (ndev, cap). Returns (req_ids (ndev, ndev, fcap) sorted per
+    peer, fetched_adj (ndev, ndev, fcap, maxdeg), overflow, off_bytes)."""
+    ndev, stride, n = meta.ndev, meta.stride, meta.n
+    t_ids = jnp.arange(ndev)
+
+    def build(t, pv, nd):
+        foreign = nd & (pv // stride != t) & (pv < n)
+        uids, umask = unique_ids(pv, foreign, n)
+        owners = jnp.clip(uids // stride, 0, ndev - 1)
+        return _per_peer_compact(uids, umask, owners, ndev, fcap, n)
+
+    reqs, counts, ov = jax.vmap(build)(t_ids, pivots, need)
+    recv = exch.a2a(reqs)                              # (ndev, src, fcap)
+
+    def answer(t, rc):
+        li = jnp.clip(rc - t * stride, 0, stride - 1)
+        ok = (rc // stride == t) & (rc < n)
+        return jnp.where(ok[..., None], adj[t][li], n)
+
+    resp = jax.vmap(answer)(t_ids, recv)               # (ndev, src, fcap, D)
+    fetched = exch.a2a(resp)                           # (ndev, peer, fcap, D)
+    off = counts * (1 - jnp.eye(ndev, dtype=counts.dtype))
+    off_bytes = off.sum().astype(jnp.float32) * 4 * (1 + meta.max_degree)
+    return reqs, fetched, jnp.any(ov), off_bytes
+
+
+def verify_exchange(adj, meta: GraphMeta, exch: Exchange,
+                    pa, pb, pmask, vcap: int):
+    """Batched verifyE over the EVI (§3.2). pa/pb/pmask: (ndev, R, K).
+    Pairs routed to owner(pa). Returns (ok (ndev, R, K) — True where the
+    edge exists or the slot is inactive, overflow, off_bytes)."""
+    ndev, stride, n = meta.ndev, meta.stride, meta.n
+    R, K = pa.shape[1], pa.shape[2]
+    fa, fb, fm = (x.reshape(ndev, R * K) for x in (pa, pb, pmask))
+
+    ua, ub, umask, rank = jax.vmap(
+        lambda a, b, m: unique_pairs(a, b, m, n))(fa, fb, fm)
+    owners = jnp.clip(ua // stride, 0, ndev - 1)
+
+    def build(uaa, ubb, mm, ow):
+        ra, ca, ov_a = _per_peer_compact(uaa, mm, ow, ndev, vcap, n)
+        rb, _, ov_b = _per_peer_compact(ubb, mm, ow, ndev, vcap, n)
+        # uniques sorted by `a` => owners non-decreasing => peers contiguous;
+        # slot inside peer block = index - first index of that owner
+        start = jax.vmap(lambda o: jnp.searchsorted(ow, o))(ow)
+        slot = jnp.arange(uaa.shape[0]) - start
+        return ra, rb, ca, slot, ov_a | ov_b
+
+    reqs_a, reqs_b, counts, slots, ov = jax.vmap(build)(ua, ub, umask, owners)
+    recv_a = exch.a2a(reqs_a)
+    recv_b = exch.a2a(reqs_b)
+
+    def answer(t, ra, rb):
+        li = jnp.clip(ra - t * stride, 0, stride - 1)
+        local_ok = (ra // stride == t) & (ra < n)
+        rows = adj[t][li]                              # (src, vcap, D)
+        memb = jax.vmap(membership)(rows, rb[..., None])[..., 0]
+        return memb & local_ok
+
+    ans = jax.vmap(answer)(jnp.arange(ndev), recv_a, recv_b)
+    back = exch.a2a(ans)                               # (ndev, peer, vcap)
+
+    def collect(bk, ow, sl, mm, rk):
+        sl_c = jnp.clip(sl, 0, vcap - 1)
+        ok_unique = bk[ow, sl_c] & mm & (sl < vcap)
+        return ok_unique[jnp.clip(rk, 0, ok_unique.shape[0] - 1)]
+
+    ok_flat = jax.vmap(collect)(back, owners, slots, umask, rank)
+    ok = ok_flat.reshape(ndev, R, K) | ~pmask
+    off = counts * (1 - jnp.eye(ndev, dtype=counts.dtype))
+    off_bytes = off.sum().astype(jnp.float32) * (8 + 1)
+    return ok, jnp.any(ov), off_bytes
+
+
+# --------------------------------------------------------------------------- #
+# Leaf expansion
+# --------------------------------------------------------------------------- #
+def _leaf_step(adj, deg, meta: GraphMeta, cfg: EngineConfig, spec: StepSpec,
+               k_off: int, rows, alive, seed_slot,
+               pend_a, pend_b, pend_m, req_ids, fetched, local_only: bool):
+    """Expand one leaf: candidates = adj(pivot); filter (injectivity,
+    symmetry, degree, local membership — Alg. 1+2); compact to frontier_cap;
+    record undetermined edges into the pending (EVI) buffers."""
+    ndev, stride, n, D = meta.ndev, meta.stride, meta.n, meta.max_degree
+    cap = cfg.frontier_cap
+    t_ids = jnp.arange(ndev)
+
+    def dev(t, rws, alv, sslot, pa, pb, pm, rq, ft):
+        R, w = rws.shape
+        adj_t, deg_t = adj[t], deg[t]
+        pv = rws[:, spec.piv_col]
+        is_local = (pv // stride == t) & (pv < n)
+        li = jnp.clip(pv - t * stride, 0, stride - 1)
+        lrow = adj_t[li]                                   # (R, D)
+        if local_only:
+            prow = jnp.where(is_local[:, None], lrow, n)
+            lost = jnp.zeros((), bool)
+        else:
+            peer = jnp.clip(pv // stride, 0, ndev - 1)
+            peer_ids = rq[peer]                            # (R, fcap)
+            slot = jax.vmap(jnp.searchsorted)(peer_ids, pv[:, None])[:, 0]
+            slot = jnp.clip(slot, 0, rq.shape[1] - 1)
+            frow = ft[peer, slot]                          # (R, D)
+            hit = jnp.take_along_axis(peer_ids, slot[:, None], 1)[:, 0] == pv
+            prow = jnp.where(is_local[:, None], lrow,
+                             jnp.where(hit[:, None], frow, n))
+            lost = jnp.any(alv & (pv < n) & ~is_local & ~hit)
+
+        cand = prow                                        # (R, D)
+        valid = (cand < n) & alv[:, None]
+        for c in range(w):                                 # injectivity
+            valid &= cand != rws[:, c][:, None]
+        for c in spec.sym_lt_cols:                         # symmetry breaking
+            valid &= rws[:, c][:, None] < cand
+        for c in spec.sym_gt_cols:
+            valid &= cand < rws[:, c][:, None]
+        c_local = (cand // stride == t) & (cand < n)
+        c_li = jnp.clip(cand - t * stride, 0, stride - 1)
+        valid &= jnp.where(c_local, deg_t[c_li] >= spec.leaf_deg, True)
+        if local_only:
+            valid &= c_local                               # Prop. 1 pruning
+        for c in spec.back_cols:       # local checks (Alg 2 lines 3-5, 8-11)
+            wv = rws[:, c]
+            w_loc = (wv // stride == t) & (wv < n)
+            w_row = adj_t[jnp.clip(wv - t * stride, 0, stride - 1)]
+            valid &= jnp.where(w_loc[:, None], membership(w_row, cand), True)
+
+        # compact (R*D) -> cap
+        parent = jnp.repeat(jnp.arange(R, dtype=jnp.int32), D)
+        new_mask, ov, parent_c, cand_c = compact(
+            valid.reshape(-1), cap, parent, cand.reshape(-1), fill=0)
+        new_rows = jnp.concatenate(
+            [rws[parent_c], cand_c[:, None].astype(jnp.int32)], axis=1)
+        new_rows = jnp.where(new_mask[:, None], new_rows, n)
+        new_slot = jnp.where(new_mask, sslot[parent_c], 0)
+        pa_n, pb_n, pm_n = pa[parent_c], pb[parent_c], pm[parent_c]
+        pm_n &= new_mask[:, None]
+
+        # new pending pairs: back edges whose f(u') is foreign. Route to the
+        # local endpoint if the candidate is local (paper: verify locally),
+        # else to owner(f(u')).
+        for k, c in enumerate(spec.back_cols):
+            wv_n = new_rows[:, c]
+            cd = new_rows[:, -1]
+            w_loc_n = (wv_n // stride == t) & (wv_n < n)
+            c_loc_n = (cd // stride == t) & (cd < n)
+            need = new_mask & ~w_loc_n
+            a_val = jnp.where(c_loc_n, cd, wv_n)
+            b_val = jnp.where(c_loc_n, wv_n, cd)
+            pa_n = pa_n.at[:, k_off + k].set(jnp.where(need, a_val, n))
+            pb_n = pb_n.at[:, k_off + k].set(jnp.where(need, b_val, n))
+            pm_n = pm_n.at[:, k_off + k].set(need)
+        return new_rows, new_mask, new_slot, pa_n, pb_n, pm_n, ov, lost
+
+    if local_only:
+        def dev_local(t, rws, alv, sslot, pa, pb, pm):
+            return dev(t, rws, alv, sslot, pa, pb, pm, None, None)
+        outs = jax.vmap(dev_local)(t_ids, rows, alive, seed_slot,
+                                   pend_a, pend_b, pend_m)
+    else:
+        outs = jax.vmap(dev)(t_ids, rows, alive, seed_slot,
+                             pend_a, pend_b, pend_m, req_ids, fetched)
+    rows, alive, seed_slot, pend_a, pend_b, pend_m, ovs, losts = outs
+    return (rows, alive, seed_slot, pend_a, pend_b, pend_m,
+            jnp.any(ovs), jnp.any(losts))
+
+
+# --------------------------------------------------------------------------- #
+# Full multi-round run
+# --------------------------------------------------------------------------- #
+def run_rounds(adj, deg, meta: GraphMeta, pd: PlanData, cfg: EngineConfig,
+               exch: Exchange, seeds, seed_mask, local_only: bool):
+    """Traceable core: all units, all leaves, exchanges per round.
+
+    seeds: (ndev, scap) global vertex ids.  Returns (rows, alive, counts,
+    complete, stats)."""
+    ndev = meta.ndev
+    scap = seeds.shape[1]
+    t_ids = jnp.arange(ndev)
+
+    rows = seeds[..., None].astype(jnp.int32)
+    alive = seed_mask
+    seed_slot = jnp.broadcast_to(
+        jnp.arange(scap, dtype=jnp.int32), seeds.shape)
+    overflow = jnp.zeros((), bool)
+    lost = jnp.zeros((), bool)
+    bytes_fetch = jnp.zeros((), jnp.float32)
+    bytes_verify = jnp.zeros((), jnp.float32)
+    node_counts = jnp.zeros((ndev, scap), jnp.int32)
+    rounds_alive = []
+
+    for ui, step_ids in enumerate(pd.unit_steps):
+        piv_col = pd.unit_piv_cols[ui]
+        if local_only:
+            req_ids = fetched = None
+        else:
+            req_ids, fetched, f_ov, f_b = fetch_exchange(
+                adj, meta, exch, rows[:, :, piv_col], alive, cfg.fetch_cap)
+            overflow |= f_ov
+            bytes_fetch += f_b
+
+        K = max(sum(len(pd.steps[s].back_cols) for s in step_ids), 1)
+        pend_a = jnp.full((ndev, rows.shape[1], K), meta.n, jnp.int32)
+        pend_b = jnp.full((ndev, rows.shape[1], K), meta.n, jnp.int32)
+        pend_m = jnp.zeros((ndev, rows.shape[1], K), bool)
+        k_off = 0
+
+        for sid in step_ids:
+            spec = pd.steps[sid]
+            (rows, alive, seed_slot, pend_a, pend_b, pend_m, ov_s, lost_s
+             ) = _leaf_step(adj, deg, meta, cfg, spec, k_off,
+                            rows, alive, seed_slot, pend_a, pend_b, pend_m,
+                            req_ids, fetched, local_only)
+            overflow |= ov_s
+            lost |= lost_s
+            k_off += len(spec.back_cols)
+            inc = jax.vmap(
+                lambda ss, al: jnp.zeros((scap,), jnp.int32)
+                .at[jnp.clip(ss, 0, scap - 1)].add(al.astype(jnp.int32))
+            )(seed_slot, alive)
+            node_counts += inc
+
+        if (not local_only) and k_off > 0:
+            ok, v_ov, v_b = verify_exchange(
+                adj, meta, exch, pend_a, pend_b, pend_m, cfg.verify_cap)
+            alive &= jnp.all(ok, axis=-1)
+            overflow |= v_ov
+            bytes_verify += v_b
+        rounds_alive.append(alive.sum(axis=-1))
+
+    counts = alive.sum(axis=-1)
+    stats = dict(bytes_fetch=bytes_fetch, bytes_verify=bytes_verify,
+                 rows_per_round=jnp.stack(rounds_alive),
+                 node_counts=node_counts)
+    return rows, alive, counts, ~(overflow | lost), stats

@@ -1,0 +1,147 @@
+"""Collective-exchange abstraction for the R-Meef engine.
+
+Engine state is *stacked*: every array carries a leading ``ndev`` axis.  In
+``sim`` mode the whole stack lives on one device and the all-to-all is an
+axis swap — bit-identical reference semantics for tests.  In ``spmd`` mode
+the leading axis is sharded over the mesh's ``data`` axis and the exchange
+is a real ``jax.lax.all_to_all`` under ``shard_map`` — the production path
+(this is the paper's fetchV/verifyE request/response, batched per round).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class Exchange:
+    """mode: 'sim' (axis swap) or 'spmd' (shard_map + lax.all_to_all)."""
+
+    mode: str = "sim"
+    mesh: Mesh | None = None
+    axis: str = "data"
+
+    def a2a(self, x: jnp.ndarray) -> jnp.ndarray:
+        """x: (ndev_src, ndev_dst, ...) -> out[t, s] = x[s, t]."""
+        if self.mode == "sim":
+            return jnp.swapaxes(x, 0, 1)
+        assert self.mesh is not None, "spmd exchange needs a mesh"
+        ndev = x.shape[0]
+
+        def body(xl):  # (1, ndev, ...)
+            out = jax.lax.all_to_all(xl[0], self.axis, split_axis=0,
+                                     concat_axis=0, tiled=True)
+            return out[None]
+
+        spec = P(self.axis, *([None] * (x.ndim - 1)))
+        return jax.shard_map(body, mesh=self.mesh, in_specs=spec,
+                             out_specs=spec)(x)
+
+    def all_reduce_sum(self, x: jnp.ndarray) -> jnp.ndarray:
+        """x: (ndev, ...) -> scalar-summed-over-devices broadcast back."""
+        if self.mode == "sim":
+            return jnp.broadcast_to(x.sum(axis=0, keepdims=True), x.shape)
+        assert self.mesh is not None
+
+        def body(xl):
+            return jax.lax.psum(xl, self.axis)
+
+        spec = P(self.axis, *([None] * (x.ndim - 1)))
+        return jax.shard_map(body, mesh=self.mesh, in_specs=spec,
+                             out_specs=spec)(x)
+
+
+# --------------------------------------------------------------------------- #
+# Static-shape primitives shared by the engines
+# --------------------------------------------------------------------------- #
+def compact(mask: jnp.ndarray, cap_out: int, *arrays: jnp.ndarray,
+            fill: int = 0) -> tuple:
+    """Stable-compact rows where ``mask`` is True into ``cap_out`` slots.
+
+    Returns (new_mask (cap_out,), overflow (bool), *gathered arrays). Rows
+    beyond cap_out are dropped and flagged.  Per-device (no leading axis).
+    """
+    n = mask.shape[0]
+    order = jnp.argsort(~mask, stable=True)
+    take = order[:cap_out] if cap_out <= n else jnp.pad(
+        order, (0, cap_out - n), constant_values=n - 1)
+    count = mask.sum()
+    new_mask = jnp.arange(cap_out) < jnp.minimum(count, cap_out)
+    overflow = count > cap_out
+    outs = []
+    for a in arrays:
+        g = a[take]
+        g = jnp.where(
+            new_mask.reshape((-1,) + (1,) * (g.ndim - 1)), g, fill)
+        outs.append(g)
+    return (new_mask, overflow, *outs)
+
+
+def membership(sorted_rows: jnp.ndarray, vals: jnp.ndarray) -> jnp.ndarray:
+    """sorted_rows (R, M) ascending (sentinel-padded), vals (R, K) ->
+    bool (R, K): vals[r, k] in sorted_rows[r]."""
+    idx = jax.vmap(jnp.searchsorted)(sorted_rows, vals)
+    idx = jnp.clip(idx, 0, sorted_rows.shape[-1] - 1)
+    found = jnp.take_along_axis(sorted_rows, idx, axis=-1) == vals
+    return found
+
+
+def unique_ids(ids: jnp.ndarray, mask: jnp.ndarray, sentinel: int
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sorted-unique of masked ids. Returns (uids (n,), umask (n,)) with
+    invalid slots pushed to the back as ``sentinel``. Output length == input
+    (a unique id count never exceeds the input count)."""
+    x = jnp.where(mask, ids, sentinel)
+    xs = jnp.sort(x)
+    first = jnp.concatenate([jnp.array([True]), xs[1:] != xs[:-1]])
+    valid = first & (xs < sentinel)
+    order = jnp.argsort(~valid, stable=True)
+    uids = jnp.where(jnp.arange(x.shape[0]) < valid.sum(), xs[order], sentinel)
+    umask = jnp.arange(x.shape[0]) < valid.sum()
+    return uids, umask
+
+
+def unique_pairs(a: jnp.ndarray, b: jnp.ndarray, mask: jnp.ndarray,
+                 sentinel: int) -> tuple:
+    """Dedup (a, b) pairs without 64-bit keys (EVI, Def. 5).
+
+    Returns (ua, ub, umask, rank) where (ua[j], ub[j]) are the unique pairs
+    (sorted lexicographically, invalid at the back) and rank[i] gives the
+    unique-slot of input pair i (undefined where ~mask). Output length ==
+    input length."""
+    n = a.shape[0]
+    av = jnp.where(mask, a, sentinel)
+    bv = jnp.where(mask, b, sentinel)
+    order = jnp.lexsort((bv, av))
+    a_s, b_s = av[order], bv[order]
+    first = jnp.concatenate(
+        [jnp.array([True]), (a_s[1:] != a_s[:-1]) | (b_s[1:] != b_s[:-1])])
+    valid_s = first & (a_s < sentinel)
+    # rank (in sorted order) of each sorted element's unique group
+    grp = jnp.cumsum(first) - 1                      # group id in sorted order
+    # unique slot j = rank among valid uniques; invalid groups map to n-1
+    uniq_slot_of_grp = jnp.cumsum(valid_s) - 1       # per sorted elem
+    # scatter unique pairs
+    ucount = valid_s.sum()
+    slot = jnp.where(valid_s, uniq_slot_of_grp, n - 1)
+    ua = jnp.full((n,), sentinel, dtype=a.dtype).at[slot].set(
+        jnp.where(valid_s, a_s, sentinel), mode="drop")
+    ub = jnp.full((n,), sentinel, dtype=b.dtype).at[slot].set(
+        jnp.where(valid_s, b_s, sentinel), mode="drop")
+    umask = jnp.arange(n) < ucount
+    # rank per input: invert the sort, then map group -> unique slot
+    grp_slot = uniq_slot_of_grp  # per sorted position, slot of its group head?
+    # each sorted elem's group head slot: gather slot at the head position
+    head_pos = jnp.maximum(jnp.cumsum(first) - 1, 0)
+    # slot for group g = uniq_slot at the head of group g; build per-group table
+    slot_of_grp = jnp.zeros((n,), dtype=jnp.int32).at[grp].max(
+        jnp.where(first, uniq_slot_of_grp, 0).astype(jnp.int32), mode="drop")
+    rank_sorted = slot_of_grp[grp]
+    inv = jnp.zeros((n,), dtype=jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32))
+    rank = rank_sorted[inv]
+    return ua, ub, umask, rank

@@ -1,0 +1,78 @@
+"""Region groups — memory-control strategy (§6, Algorithm 3).
+
+The candidate set of ``dp0.piv`` on each device is split into groups whose
+*estimated* memory cost (trie nodes, calibrated from the SM-E pass) fits the
+budget; groups are processed sequentially. Grouping maximizes neighborhood
+sharing via the paper's ``proximity`` measure (Eq. 5) for small candidate
+sets, falling back to sorted-id blocks (block partitions make id-adjacent
+vertices neighborhood-similar) for large ones.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graph.storage import PartitionedGraph
+
+
+def proximity_groups(pg: PartitionedGraph, cands: np.ndarray,
+                     est_cost: np.ndarray, budget: float,
+                     seed: int = 0) -> list[np.ndarray]:
+    """Algorithm 3, run to exhaustion (returns all groups, not just one)."""
+    rng = np.random.default_rng(seed)
+    remaining = list(map(int, cands))
+    cost = {int(v): float(c) for v, c in zip(cands, est_cost)}
+    groups: list[np.ndarray] = []
+    while remaining:
+        i = int(rng.integers(len(remaining)))
+        v0 = remaining.pop(i)
+        rg = [v0]
+        phi = cost[v0]
+        nbr_set = set(map(int, pg.neighbors(v0)))
+        while remaining and phi < budget:
+            # argmax proximity(v, rg) = |adj(v) ∩ N(rg)| / |adj(v)|   (Eq. 5)
+            best_j, best_p = 0, -1.0
+            for j, v in enumerate(remaining):
+                nb = pg.neighbors(v)
+                if len(nb) == 0:
+                    p = 0.0
+                else:
+                    p = sum(1 for x in nb if int(x) in nbr_set) / len(nb)
+                if p > best_p:
+                    best_j, best_p = j, p
+            v = remaining.pop(best_j)
+            if phi + cost[v] > budget and len(rg) >= 1:
+                remaining.append(v)        # Alg. 3 line 8-9: roll back
+                break
+            rg.append(v)
+            phi += cost[v]
+            nbr_set.update(map(int, pg.neighbors(v)))
+        groups.append(np.array(rg, dtype=np.int64))
+    return groups
+
+
+def block_groups(cands: np.ndarray, est_cost: np.ndarray,
+                 budget: float) -> list[np.ndarray]:
+    """Sorted-id greedy packing (locality from block partitioning)."""
+    order = np.argsort(cands)
+    cands, est_cost = cands[order], est_cost[order]
+    groups, cur, phi = [], [], 0.0
+    for v, c in zip(cands, est_cost):
+        if cur and phi + c > budget:
+            groups.append(np.array(cur, dtype=np.int64))
+            cur, phi = [], 0.0
+        cur.append(int(v))
+        phi += float(c)
+    if cur:
+        groups.append(np.array(cur, dtype=np.int64))
+    return groups
+
+
+def make_region_groups(pg: PartitionedGraph, cands: np.ndarray,
+                       est_cost: np.ndarray, budget: float,
+                       proximity_threshold: int = 256,
+                       seed: int = 0) -> list[np.ndarray]:
+    if len(cands) == 0:
+        return []
+    if len(cands) <= proximity_threshold:
+        return proximity_groups(pg, cands, est_cost, budget, seed)
+    return block_groups(cands, est_cost, budget)

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (Prefetcher, lm_token_stream,
+                                 din_batch_stream, gnn_epoch_stream)

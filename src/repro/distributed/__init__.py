@@ -1,0 +1,4 @@
+from repro.distributed.sharding import param_shardings, data_shardings, dp_axes
+from repro.distributed.compression import (compress_roundtrip,
+                                           init_error_feedback,
+                                           compressed_psum)

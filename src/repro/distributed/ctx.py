@@ -1,0 +1,46 @@
+"""Optimization-flag context for the perf loop (§Perf).
+
+The model code is shared between the single-device smoke tests and the
+512-chip dry-run; sharding-sensitive optimizations are toggled here (set by
+``launch.specs.build_cell(variant=...)``) so the paper-faithful baseline
+stays reproducible and every hillclimb change is one flag.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass
+class OptFlags:
+    dp_axes: tuple = ("data",)      # data-parallel mesh axes
+    moe_ep_constrain: bool = False  # explicit EP dispatch shardings (MoE)
+    gnn_bf16_msgs: bool = False     # bf16 edge messages/partials (GNN)
+    moe_capacity_factor: float | None = None  # override cf (dispatch volume)
+    moe_tp: bool = False            # TP-MoE: shard experts over d_ff, not E
+    gnn_replicate_nodes: bool = False  # replicate node feats (kill gathers)
+
+
+CURRENT = OptFlags()
+
+
+def set_flags(**kw):
+    global CURRENT
+    for k, v in kw.items():
+        setattr(CURRENT, k, v)
+
+
+def reset():
+    global CURRENT
+    CURRENT = OptFlags()
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint that degrades to identity outside a mesh
+    context (single-device tests)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x

@@ -1,0 +1,113 @@
+"""Sharding rules: param pytree + family -> NamedSharding pytree.
+
+Scheme (single pod (data=16, model=16); multi-pod adds a leading 'pod' axis
+that joins the FSDP group):
+
+* LM: Megatron TP over 'model' (column-parallel wq/wk/wv/wg/wu, row-parallel
+  wo/wd), FSDP (ZeRO-3 style) over 'data' (+'pod') on the complementary dim,
+  experts EP over 'model', embeddings vocab-sharded over 'model' + FSDP'd.
+* GNN: params replicated (tiny), edge/node arrays sharded over 'data'
+  (edge parallelism; segment_sum lowers to reduce-scatter of partials).
+* RecSys: embedding tables row-sharded over every axis (they dominate),
+  dense MLPs replicated.
+
+Inputs (`data_sharding`): batch dims over the DP axes; long-context decode
+shards the KV-cache *sequence* dim instead (batch=1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """All data-parallel axes: ('pod', 'data') on multi-pod, ('data',) else."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _lm_spec(path: str, ndim: int, fsdp) -> P:
+    """Leading axis of stacked-layer params is the layer axis (unsharded)."""
+    lead = (None,) * (ndim - 2)
+    if "router" in path or path.endswith("_norm") or "ln" in path \
+            or "norm" in path or path.endswith(("bq", "bk", "bv")) or ndim <= 1 + len(lead):
+        return P()
+    if "embed" in path or "lm_head" in path:
+        # vocab over 'model' only: the head matmul then propagates to
+        # (batch 'data', seq, vocab 'model') logits with no resharding of
+        # the contraction dim (d replicated) — see EXPERIMENTS.md §Perf
+        return P("model", None) if "embed" in path else P(None, "model")
+    col = ("wq", "wk", "wv", "wg", "wu", "w_uq", "w_uk", "w_uv", "w_dq",
+           "w_dkv", "w_kr", "shared_wg", "shared_wu", "proj")
+    row = ("wo", "wd", "shared_wd")
+    name = path.rsplit("/", 1)[-1]
+    if ndim == 4:  # stacked experts (L, E, d, f)
+        from repro.distributed import ctx
+        if ctx.CURRENT.moe_tp:
+            # TP-MoE: every device holds all experts' f-shard; token
+            # dispatch never crosses the model axis (§Perf deepseek iter 2)
+            if name in ("wg", "wu"):
+                return P(None, None, fsdp, "model")
+            if name == "wd":
+                return P(None, None, "model", fsdp)
+            return P()
+        if name in ("wg", "wu"):
+            return P(None, "model", fsdp, None)
+        if name == "wd":
+            return P(None, "model", None, fsdp)
+        return P()
+    if name in col:
+        return P(*lead, fsdp, "model")
+    if name in row:
+        return P(*lead, "model", fsdp)
+    return P()
+
+
+def param_shardings(params, family: str, mesh: Mesh):
+    dp = dp_axes(mesh)
+    fsdp = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def spec_of(path_parts, leaf):
+        path = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path_parts)
+        nd = leaf.ndim if hasattr(leaf, "ndim") else 0
+        if family == "lm":
+            sp = _lm_spec(path, nd, fsdp)
+        elif family == "recsys":
+            if "table" in path and nd == 2:
+                axes = tuple(mesh.axis_names)
+                sp = P(axes, None)
+            else:
+                sp = P()
+        else:  # gnn — replicate
+            sp = P()
+        # drop axes that don't divide the dim (safety for reduced configs)
+        shape = getattr(leaf, "shape", ())
+        fixed = []
+        for i, ax in enumerate(sp):
+            if ax is None or i >= len(shape):
+                fixed.append(None)
+                continue
+            size = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                size *= mesh.shape[a]
+            fixed.append(ax if shape[i] % size == 0 else None)
+        return NamedSharding(mesh, P(*fixed) if fixed else P())
+
+    return jax.tree_util.tree_map_with_path(spec_of, params)
+
+
+def data_shardings(family: str, kind: str, mesh: Mesh):
+    """Returns a function: array-ndim/dim-role -> NamedSharding for inputs.
+    Used by dryrun's input_specs; see launch/specs.py for per-cell wiring."""
+    dp = dp_axes(mesh)
+    batch_axes = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def batch0(ndim):
+        return NamedSharding(mesh, P(batch_axes, *([None] * (ndim - 1))))
+
+    return batch0
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

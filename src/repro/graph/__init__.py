@@ -1,0 +1,13 @@
+from repro.graph.storage import Graph, PartitionedGraph, build_partitioned
+from repro.graph.partition import partition, edge_cut
+from repro.graph.generators import (road_graph, powerlaw_graph, erdos_graph,
+                                    community_graph, molecule_batch,
+                                    icosahedral_mesh, make_dataset, load_dataset)
+from repro.graph.sampler import SampledSubgraph, sample_neighbors, sample_capacities
+
+__all__ = [
+    "Graph", "PartitionedGraph", "build_partitioned", "partition", "edge_cut",
+    "road_graph", "powerlaw_graph", "erdos_graph", "community_graph",
+    "molecule_batch", "icosahedral_mesh", "make_dataset", "load_dataset",
+    "SampledSubgraph", "sample_neighbors", "sample_capacities",
+]

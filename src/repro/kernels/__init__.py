@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the perf-critical hot spots, each with a pure-jnp
+oracle (ref.py) and a jit'd wrapper (ops.py). Validated in interpret mode on
+CPU; BlockSpecs target TPU v5e VMEM/MXU (see DESIGN.md §2 hardware notes).
+
+  membership    — batched sorted-set membership (verifyE answering)
+  intersect     — sorted adjacency intersection (candidate refinement)
+  segment_spmm  — GNN scatter-aggregate as one-hot MXU matmul
+  flash_attn    — causal flash attention (online softmax)
+  moe_gemm      — grouped per-expert SwiGLU GEMM
+"""
+from repro.kernels.membership.ops import membership
+from repro.kernels.intersect.ops import intersect
+from repro.kernels.segment_spmm.ops import segment_spmm, segment_spmm_tiled
+from repro.kernels.flash_attn.ops import flash_attention_k
+from repro.kernels.moe_gemm.ops import moe_gemm
+
+__all__ = ["membership", "intersect", "segment_spmm", "segment_spmm_tiled",
+           "flash_attention_k", "moe_gemm"]

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: causal flash attention (online softmax, VMEM-tiled).
+
+Grid = (batch*heads, q_blocks); the kv loop runs *inside* the kernel with a
+``fori_loop`` so the (Bq, D) accumulator, running max and denominator stay
+in VMEM/VREGs across the whole row of kv blocks — one HBM write per q tile.
+Block shapes default to MXU-aligned (128, head_dim); causal blocks beyond
+the diagonal are skipped by masking (structural zero work is visible to the
+roofline via the cost model, see benchmarks).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int,
+                  seq_kv: int, causal: bool, scale: float):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale           # (bq, D)
+    D = q.shape[-1]
+    nk = seq_kv // bk
+
+    def body(ki, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice(k_ref[0], (ki * bk, 0),
+                                  (bk, k_ref.shape[-1])).astype(jnp.float32)
+        v = jax.lax.dynamic_slice(v_ref[0], (ki * bk, 0),
+                                  (bk, v_ref.shape[-1])).astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bq, bk)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    a0 = jnp.zeros((bq, v_ref.shape[-1]), jnp.float32)
+    if causal:
+        # only kv blocks up to (and including) the diagonal do work
+        n_iter = jnp.minimum((qi + 1) * bq, seq_kv) // bk \
+            + jnp.where(((qi + 1) * bq) % bk != 0, 1, 0)
+    else:
+        n_iter = nk
+    m, l, acc = jax.lax.fori_loop(0, n_iter, body, (m0, l0, a0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           causal: bool = True, bq: int = 128, bk: int = 128,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q (BH, Sq, D); k/v (BH, Skv, D) — heads pre-flattened & GQA
+    pre-broadcast (ops.py handles layout). Returns (BH, Sq, Dv)."""
+    BH, Sq, D = q.shape
+    Skv = k.shape[1]
+    Dv = v.shape[-1]
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, "pad seq to block multiples"
+    scale = D ** -0.5
+    grid = (BH, Sq // bq)
+    return pl.pallas_call(
+        partial(_flash_kernel, bq=bq, bk=bk, seq_kv=Skv, causal=causal,
+                scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, Skv, D), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, Skv, Dv), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, Dv), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, Dv), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,31 @@
+"""Layout handling + jit'd entry for the flash-attention kernel."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.kernel import flash_attention_pallas
+from repro.kernels.flash_attn.ref import flash_attention_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "use_kernel", "interpret",
+                                   "bq", "bk"))
+def flash_attention_k(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      causal: bool = True, use_kernel: bool = True,
+                      interpret: bool = True, bq: int = 128,
+                      bk: int = 128) -> jnp.ndarray:
+    """(B, S, H, D) layout with GQA (k/v heads Hk | H % Hk == 0)."""
+    B, Sq, H, D = q.shape
+    Hk = k.shape[2]
+    rep = H // Hk
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = kr.transpose(0, 2, 1, 3).reshape(B * H, -1, D)
+    vf = vr.transpose(0, 2, 1, 3).reshape(B * H, -1, vr.shape[-1])
+    if use_kernel:
+        out = flash_attention_pallas(qf, kf, vf, causal=causal,
+                                     bq=bq, bk=bk, interpret=interpret)
+    else:
+        out = flash_attention_ref(qf, kf, vf, causal=causal)
+    return out.reshape(B, H, Sq, -1).transpose(0, 2, 1, 3)

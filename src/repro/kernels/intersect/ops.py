@@ -1,0 +1,16 @@
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.intersect.kernel import intersect_pallas
+from repro.kernels.intersect.ref import intersect_ref
+
+
+@partial(jax.jit, static_argnames=("sentinel", "use_kernel", "interpret"))
+def intersect(a: jnp.ndarray, b: jnp.ndarray, sentinel: int,
+              use_kernel: bool = False, interpret: bool = True):
+    """Sorted-list intersection: (mask over a, per-row count)."""
+    if use_kernel:
+        return intersect_pallas(a, b, sentinel, interpret=interpret)
+    return intersect_ref(a, b, sentinel)

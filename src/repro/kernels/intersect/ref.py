@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the intersect kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def intersect_ref(a: jnp.ndarray, b: jnp.ndarray, sentinel: int):
+    idx = jax.vmap(jnp.searchsorted)(b, a)
+    idx = jnp.clip(idx, 0, b.shape[-1] - 1)
+    mask = (jnp.take_along_axis(b, idx, axis=-1) == a) & (a != sentinel)
+    return mask, mask.sum(axis=-1, dtype=jnp.int32)

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: batched sorted-set membership (verifyE / Alg 2 checks).
+
+Given sentinel-padded *sorted* adjacency windows ``rows (B, M)`` and query
+values ``vals (B, K)``, produce ``out (B, K) bool`` with
+``out[b, k] = vals[b, k] in rows[b]``.
+
+TPU adaptation (instead of the GPU binary-search-per-thread): the row is
+streamed through the VPU in 128-lane chunks and compared against the query
+vector with an OR-reduction — no dynamic gather, fully vectorized, and the
+(B_tile, M) working set is explicitly tiled into VMEM via BlockSpec. For
+adjacency windows (M <= few hundred) this is compare-bound, far below the
+VPU roofline of the surrounding scatter code it replaces.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _membership_kernel(rows_ref, vals_ref, out_ref, *, m_chunk: int):
+    rows = rows_ref[...]          # (TB, M) int32, sorted, sentinel-padded
+    vals = vals_ref[...]          # (TB, K) int32
+    TB, M = rows.shape
+    K = vals.shape[1]
+    acc = jnp.zeros((TB, K), dtype=jnp.bool_)
+    n_chunks = M // m_chunk
+
+    def body(c, acc):
+        chunk = jax.lax.dynamic_slice(rows, (0, c * m_chunk), (TB, m_chunk))
+        hit = (vals[:, :, None] == chunk[:, None, :]).any(axis=-1)
+        return acc | hit
+
+    acc = jax.lax.fori_loop(0, n_chunks, body, acc)
+    out_ref[...] = acc
+
+
+def membership_pallas(rows: jnp.ndarray, vals: jnp.ndarray,
+                      block_b: int = 256, m_chunk: int = 128,
+                      interpret: bool = True) -> jnp.ndarray:
+    """rows (B, M) sorted int32; vals (B, K) int32 -> (B, K) bool."""
+    B, M = rows.shape
+    K = vals.shape[1]
+    # pad M to a chunk multiple and B to a block multiple
+    m_chunk = min(m_chunk, max(M, 1))
+    Mp = -(-M // m_chunk) * m_chunk
+    Bp = -(-B // block_b) * block_b
+    rows_p = jnp.pad(rows, ((0, Bp - B), (0, Mp - M)),
+                     constant_values=jnp.iinfo(jnp.int32).max)
+    vals_p = jnp.pad(vals, ((0, Bp - B), (0, 0)),
+                     constant_values=jnp.iinfo(jnp.int32).min)
+    grid = (Bp // block_b,)
+    out = pl.pallas_call(
+        partial(_membership_kernel, m_chunk=m_chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, Mp), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, K), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, K), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, K), jnp.bool_),
+        interpret=interpret,
+    )(rows_p, vals_p)
+    return out[:B]

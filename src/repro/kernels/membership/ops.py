@@ -1,0 +1,20 @@
+"""Jit'd entry point: Pallas on TPU, jnp reference elsewhere."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.membership.kernel import membership_pallas
+from repro.kernels.membership.ref import membership_ref
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def membership(rows: jnp.ndarray, vals: jnp.ndarray,
+               use_kernel: bool = False, interpret: bool = True) -> jnp.ndarray:
+    """Edge-existence / candidate-refinement membership test.
+
+    ``use_kernel=True`` runs the Pallas kernel (interpret=True on CPU);
+    the default jnp path is what the engine uses on this CPU container."""
+    if use_kernel:
+        return membership_pallas(rows, vals, interpret=interpret)
+    return membership_ref(rows, vals)

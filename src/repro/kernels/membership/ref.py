@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the membership kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def membership_ref(rows: jnp.ndarray, vals: jnp.ndarray) -> jnp.ndarray:
+    """rows (B, M) sorted int32 (sentinel-padded); vals (B, K) -> (B, K)."""
+    idx = jax.vmap(jnp.searchsorted)(rows, vals)
+    idx = jnp.clip(idx, 0, rows.shape[-1] - 1)
+    return jnp.take_along_axis(rows, idx, axis=-1) == vals

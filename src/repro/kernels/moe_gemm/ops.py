@@ -1,0 +1,19 @@
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_gemm.kernel import moe_gemm_pallas
+from repro.kernels.moe_gemm.ref import moe_gemm_ref
+
+
+@partial(jax.jit, static_argnames=("use_kernel", "interpret", "bc", "bf"))
+def moe_gemm(x: jnp.ndarray, wg: jnp.ndarray, wu: jnp.ndarray,
+             wd: jnp.ndarray, use_kernel: bool = True,
+             interpret: bool = True, bc: int = 128,
+             bf: int = 128) -> jnp.ndarray:
+    """Grouped expert SwiGLU FFN over the dispatched buffer (E, C, d)."""
+    if use_kernel:
+        return moe_gemm_pallas(x, wg, wu, wd, bc=bc, bf=bf,
+                               interpret=interpret)
+    return moe_gemm_ref(x, wg, wu, wd)

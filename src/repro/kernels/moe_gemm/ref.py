@@ -1,0 +1,14 @@
+"""Pure-jnp oracle: dense per-expert SwiGLU."""
+import jax
+import jax.numpy as jnp
+
+
+def moe_gemm_ref(x: jnp.ndarray, wg: jnp.ndarray, wu: jnp.ndarray,
+                 wd: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("ecd,edf->ecf", x, wg,
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", x, wu,
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, wd,
+                      preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,47 @@
+"""Pallas TPU kernel: segment-sum message aggregation as one-hot MXU matmul.
+
+GNN message passing ``out[n] = Σ_{e: dst_e = n} msg_e`` is a scatter — the
+worst case for a systolic machine. TPU adaptation (DESIGN.md §2): edges are
+host-sorted by destination and tiled so each grid step owns one destination
+tile; within a step the scatter becomes ``one_hot(dst_local)ᵀ @ msgs`` — a
+(TN, TE) x (TE, D) matmul that runs on the MXU at full tilt. This is the
+classic TPU scatter-to-matmul rewrite (cf. MegaBlocks-style dispatch).
+
+Inputs (pre-tiled by ``ops.tile_edges``):
+  msgs      (n_tiles, TE, D)  — gathered source messages, padded
+  dst_local (n_tiles, TE)     — destination index *within* the tile, TN = pad
+Output:
+  out       (n_tiles, TN, D)  — per-tile aggregates (caller reshapes to (N, D))
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmm_kernel(msgs_ref, dst_ref, out_ref, *, tn: int):
+    msgs = msgs_ref[0]                  # (TE, D)
+    dst = dst_ref[0]                    # (TE,)
+    onehot = (dst[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, tn), 1)
+              ).astype(msgs.dtype)      # (TE, TN)
+    out_ref[0] = jax.lax.dot_general(
+        onehot, msgs, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+
+def segment_spmm_pallas(msgs: jnp.ndarray, dst_local: jnp.ndarray, tn: int,
+                        interpret: bool = True) -> jnp.ndarray:
+    n_tiles, te, d = msgs.shape
+    out = pl.pallas_call(
+        partial(_spmm_kernel, tn=tn),
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((1, te, d), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((1, te), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, tn, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, tn, d), jnp.float32),
+        interpret=interpret,
+    )(msgs, dst_local)
+    return out

@@ -1,0 +1,102 @@
+"""Host-side edge tiling + jit'd entry point for segment-SpMM."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.segment_spmm.kernel import segment_spmm_pallas
+from repro.kernels.segment_spmm.ref import segment_spmm_ref, segment_sum_dense
+
+
+def tile_edges(dst: np.ndarray, n: int, tn: int, te: int):
+    """Sort edges by destination and pack into (n_tiles, te) slots so tile t
+    holds edges targeting nodes [t*tn, (t+1)*tn). Edges overflowing a tile's
+    ``te`` slots spill into duplicate tiles for the same node range.
+
+    Returns (perm, tile_ids, dst_local, slot_mask): feed ``msgs[perm]``
+    scattered into (n_tiles, te, D) at ``slot``."""
+    dst = np.asarray(dst)
+    order = np.argsort(dst, kind="stable")
+    sdst = dst[order]
+    tile_of_edge = sdst // tn
+    n_node_tiles = -(-n // tn)
+    tiles, slots, owner_tile = [], [], []
+    counts = np.zeros(0, dtype=np.int64)
+    tile_base: dict[int, int] = {}
+    next_tile = 0
+    fill: list[int] = []
+    for e_idx in range(len(sdst)):
+        t = int(tile_of_edge[e_idx])
+        if t not in tile_base:
+            tile_base[t] = next_tile
+            fill.append(0)
+            next_tile += 1
+            owner_tile.append(t)
+        cur = tile_base[t]
+        while fill[cur] >= te:          # spill tile
+            if cur + 1 < next_tile and owner_tile[cur + 1] == t:
+                cur += 1
+            else:
+                owner_tile.append(t)
+                fill.append(0)
+                next_tile += 1
+                cur = next_tile - 1
+            tile_base[t] = cur
+        tiles.append(cur)
+        slots.append(fill[cur])
+        fill[cur] += 1
+    n_tiles = max(next_tile, 1)
+    return (order.astype(np.int32), np.asarray(tiles, np.int32),
+            np.asarray(slots, np.int32),
+            np.asarray(owner_tile + [0] * (n_tiles - len(owner_tile)), np.int32),
+            n_tiles)
+
+
+def pack_messages(msgs: jnp.ndarray, dst: jnp.ndarray, tiling, tn: int,
+                  te: int):
+    """Scatter gathered messages into the tiled layout."""
+    perm, tiles, slots, owner, n_tiles = tiling
+    d = msgs.shape[-1]
+    sm = msgs[perm]
+    sd = dst[perm]
+    buf = jnp.zeros((n_tiles, te, d), msgs.dtype)
+    buf = buf.at[tiles, slots].set(sm)
+    dl = jnp.full((n_tiles, te), tn, jnp.int32)   # tn == drop slot
+    dl = dl.at[tiles, slots].set(sd - owner[tiles] * tn)
+    return buf, dl, owner, n_tiles
+
+
+@partial(jax.jit, static_argnames=("n", "use_kernel", "interpret", "tn", "te"))
+def segment_spmm(msgs: jnp.ndarray, dst: jnp.ndarray, n: int,
+                 use_kernel: bool = False, interpret: bool = True,
+                 tn: int = 128, te: int = 512) -> jnp.ndarray:
+    """out (n, D) = segment_sum(msgs, dst). The kernel path requires static
+    host tiling, so it is exposed via ``segment_spmm_tiled`` below; this
+    entry runs the XLA-native path."""
+    del use_kernel, interpret, tn, te
+    return segment_sum_dense(msgs, dst, n)
+
+
+def segment_spmm_tiled(msgs: jnp.ndarray, dst: np.ndarray, n: int,
+                       tn: int = 128, te: int = 512,
+                       use_kernel: bool = True,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Full pipeline: host tiling -> one-hot-matmul Pallas kernel ->
+    un-tile + combine spill tiles. Oracle-equivalent to segment_sum."""
+    tiling = tile_edges(np.asarray(dst), n, tn, te)
+    buf, dl, owner, n_tiles = pack_messages(msgs, jnp.asarray(dst), tiling,
+                                            tn, te)
+    if use_kernel:
+        # kernel drop slot: dst_local == tn rows contribute to none
+        tiles_out = segment_spmm_pallas(
+            buf, dl, tn, interpret=interpret)          # (n_tiles, tn, D)
+    else:
+        tiles_out = segment_spmm_ref(buf, dl, tn)
+    # combine spill tiles: scatter-add tile outputs to their node range
+    n_node_tiles = -(-n // tn)
+    out = jnp.zeros((n_node_tiles, tn, msgs.shape[-1]), jnp.float32)
+    out = out.at[owner].add(tiles_out)
+    return out.reshape(n_node_tiles * tn, -1)[:n]

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle: plain segment_sum over the same tiled layout."""
+import jax
+import jax.numpy as jnp
+
+
+def segment_spmm_ref(msgs: jnp.ndarray, dst_local: jnp.ndarray,
+                     tn: int) -> jnp.ndarray:
+    """msgs (n_tiles, TE, D); dst_local (n_tiles, TE) in [0, TN] (TN = drop).
+    -> (n_tiles, TN, D) float32."""
+    def per_tile(m, d):
+        return jax.ops.segment_sum(m.astype(jnp.float32), d,
+                                   num_segments=tn + 1)[:tn]
+    return jax.vmap(per_tile)(msgs, dst_local)
+
+
+def segment_sum_dense(msgs: jnp.ndarray, dst: jnp.ndarray,
+                      n: int) -> jnp.ndarray:
+    """Untiled end-to-end oracle."""
+    return jax.ops.segment_sum(msgs.astype(jnp.float32), dst, num_segments=n)

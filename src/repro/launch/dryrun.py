@@ -1,0 +1,182 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS",
+                                         "--xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes, record memory/cost/collective analysis.
+
+MUST be run as a module entry (``python -m repro.launch.dryrun``) so the
+XLA_FLAGS above land before jax initializes its backends.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+  python -m repro.launch.dryrun --list
+Artifacts: experiments/artifacts/dryrun_<arch>_<shape>_<mesh>.json
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, all_cells, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+from repro.utils import dump_json, human_bytes
+
+ARTIFACT_DIR = os.environ.get("DRYRUN_ARTIFACTS",
+                              os.path.join(os.path.dirname(__file__),
+                                           "../../../experiments/artifacts"))
+
+_COLL_RE = re.compile(
+    r"=\s*(.*?)\s+(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)(?:-start|-done)?\(", re.I)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s8": 1, "u8": 1, "pred": 1, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def parse_collective_bytes(hlo: str) -> dict:
+    """Sum output-buffer bytes of every collective op in (optimized) HLO.
+
+    XLA's cost model (and a naive text sum) counts while-loop bodies ONCE,
+    but a scanned transformer executes them n_layers times — so collectives
+    are attributed to entry vs region (loop-body/branch) computations, and
+    the roofline applies the static trip count to ``in_regions`` (see
+    benchmarks/roofline.py; calibrated in EXPERIMENTS.md §Roofline notes)."""
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0, "ops": 0,
+           "in_regions": 0}
+    in_entry = False
+    for line in hlo.splitlines():
+        ls = line.lstrip()
+        if ls.startswith("ENTRY "):
+            in_entry = True
+        elif (not line.startswith(" ")) and ls.startswith("%") \
+                and ls.rstrip().endswith("{"):
+            in_entry = False
+        if "-done(" in line:      # -start already counted
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(2).lower()
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(m.group(1)):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[kind] += nbytes
+        out["ops"] += 1
+        if not in_entry:
+            out["in_regions"] += nbytes
+    out["total"] = sum(out[k] for k in
+                       ("all-gather", "all-reduce", "reduce-scatter",
+                        "all-to-all", "collective-permute"))
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, verbose: bool = True,
+             variant: str = "baseline"):
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    t0 = time.time()
+    with mesh:
+        cell = build_cell(arch, shape, mesh, variant=variant)
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings)
+        lowered = jitted.lower(*cell.arg_specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = parse_collective_bytes(hlo)
+    mem_d = {}
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "host_argument_size_in_bytes"):
+            mem_d[k] = int(getattr(mem, k, 0) or 0)
+    cost_d = {}
+    if cost:
+        for k in ("flops", "bytes accessed", "transcendentals",
+                  "utilization operand 0 {}", "bytes accessed output {}"):
+            if k in cost:
+                cost_d[k.replace(" ", "_").replace("{}", "").strip("_")] = \
+                    float(cost[k])
+        for k, v in cost.items():
+            if k in ("flops", "bytes accessed"):
+                cost_d[k.replace(" ", "_")] = float(v)
+    rec = dict(arch=arch, shape=shape, mesh=mesh_kind, variant=variant,
+               n_devices=mesh.devices.size,
+               lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+               memory=mem_d, cost=cost_d, collectives=coll,
+               meta={k: (int(v) if isinstance(v, (int, float)) else v)
+                     for k, v in cell.meta.items()},
+               ok=True)
+    suffix = "" if variant == "baseline" else f"_{variant}"
+    path = os.path.join(ARTIFACT_DIR,
+                        f"dryrun_{arch}_{shape}_{mesh_kind}{suffix}.json")
+    dump_json(path, rec)
+    if verbose:
+        tot = mem_d.get("temp_size_in_bytes", 0) + \
+            mem_d.get("argument_size_in_bytes", 0)
+        print(f"[dryrun] {arch} x {shape} x {mesh_kind} [{variant}]: OK "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s "
+              f"flops/dev {cost_d.get('flops', 0):.3e} "
+              f"mem/dev {human_bytes(tot)} "
+              f"coll {human_bytes(coll['total'])} ({coll['ops']} ops)")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="baseline",
+                    choices=["baseline", "opt", "opt2", "opt3"])
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for a, s in all_cells():
+            print(f"{a:20s} {s}")
+        return
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = all_cells() if args.all else [(args.arch, args.shape)]
+    failures = []
+    for arch, shape in cells:
+        for mk in meshes:
+            try:
+                run_cell(arch, shape, mk, variant=args.variant)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                traceback.print_exc()
+                failures.append((arch, shape, mk, str(e)))
+                dump_json(os.path.join(
+                    ARTIFACT_DIR, f"dryrun_{arch}_{shape}_{mk}.json"),
+                    dict(arch=arch, shape=shape, mesh=mk, ok=False,
+                         error=str(e)))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        sys.exit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; ``dryrun.py`` sets ``--xla_force_host_platform_device_count=512``
+before any jax import and then calls these.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = 256 chips (data, model).
+    Multi-pod: (2, 16, 16) = 512 chips (pod, data, model) — the 'pod' axis
+    joins the FSDP/data-parallel group and carries the compressed gradient
+    all-reduce on the slow inter-pod links."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_engine_mesh(ndev: int | None = None):
+    """1-D mesh for the enumeration engine (paper workload): every chip is a
+    'machine' M_t holding one graph partition."""
+    ndev = ndev or len(jax.devices())
+    return jax.make_mesh((ndev,), ("data",),
+                         axis_types=(AxisType.Auto,))

@@ -1,0 +1,368 @@
+"""Per-(arch x shape) step functions + ShapeDtypeStruct input specs +
+shardings — the single source of truth the dry-run, roofline and perf loop
+all consume.
+
+``build_cell(arch_id, shape_name, mesh, opt)`` returns a ``Cell`` with:
+  fn           — the function to lower (train_step / prefill / serve_step)
+  arg_specs    — pytree of jax.ShapeDtypeStruct (weak-type-correct, no
+                 device allocation)
+  in_shardings — matching pytree of NamedSharding
+  meta         — model-flops estimates etc. for §Roofline
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import GNNConfig, RecsysConfig, TransformerConfig
+from repro.distributed.sharding import dp_axes, param_shardings
+from repro.graph.sampler import sample_capacities
+from repro.models.gnn import GraphBatch, gnn_loss, init_gnn
+from repro.models.recsys import DINBatch, din_loss, init_din, retrieval_scores
+from repro.models.transformer import (cache_spec, decode_step, init_lm_params,
+                                      lm_loss, prefill)
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+
+F32, BF16, I32, BOOL = jnp.float32, jnp.bfloat16, jnp.int32, jnp.bool_
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    fn: Callable
+    arg_specs: tuple
+    in_shardings: tuple
+    meta: dict = field(default_factory=dict)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _rep(mesh):
+    return NamedSharding(mesh, P())
+
+
+def _eval_params(init_fn, *args):
+    return jax.eval_shape(lambda k: init_fn(k, *args), jax.random.PRNGKey(0))
+
+
+# --------------------------------------------------------------------------- #
+# LM cells
+# --------------------------------------------------------------------------- #
+def _lm_train_cell(arch, shape, cfg: TransformerConfig, mesh, opt: AdamWConfig,
+                   remat: bool = True):
+    p_spec = _eval_params(init_lm_params, cfg)
+    p_sh = param_shardings(p_spec, "lm", mesh)
+    o_spec = jax.eval_shape(lambda p: init_opt_state(p, opt), p_spec)
+    o_sh = dict(mu=p_sh, nu=p_sh, step=_rep(mesh))
+    B, S = shape["global_batch"], shape["seq_len"]
+    dp = dp_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    tok_sh = NamedSharding(mesh, P(dpa, None))
+    lg_sh = NamedSharding(mesh, P(dpa, None, "model"))
+    hid_sh = NamedSharding(mesh, P(dpa, None, None))
+
+    def train_step(params, opt_state, tokens, labels):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm_loss(p, cfg, tokens, labels, remat=remat,
+                              logits_sharding=lg_sh,
+                              hidden_sharding=hid_sh))(params)
+        params, opt_state, info = adamw_update(params, grads, opt_state, opt)
+        return params, opt_state, loss, info["grad_norm"]
+
+    toks = _sds((B, S), I32)
+    D = 2 * B * S  # tokens * 2 (fwd тokens incl labels irrelevant)
+    model_flops = 6 * cfg.active_param_count() * B * S * (3 if remat else 3)
+    # 6ND fwd+bwd; remat adds ~1 extra fwd -> noted separately
+    meta = dict(model_flops=6 * cfg.active_param_count() * B * S,
+                model_flops_remat=8 * cfg.active_param_count() * B * S,
+                tokens=B * S, scan_trip=cfg.n_layers)
+    return Cell(arch, shape.name, train_step,
+                (p_spec, o_spec, toks, toks),
+                (p_sh, o_sh, tok_sh, tok_sh), meta)
+
+
+def _lm_prefill_cell(arch, shape, cfg, mesh, variant: str = "baseline"):
+    p_spec = _eval_params(init_lm_params, cfg)
+    p_sh = param_shardings(p_spec, "lm", mesh)
+    B, S = shape["global_batch"], shape["seq_len"]
+    dp = dp_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    tok_sh = NamedSharding(mesh, P(dpa, None))
+    if variant == "baseline":
+        def prefill_step(params, tokens):
+            logits, cache = prefill(params, cfg, tokens)
+            return logits[:, -1], cache
+    else:
+        # opt: sharded cache init/updates + last-token-only logits (§Perf)
+        cs = cache_spec(cfg, B, S)
+        c_sh = {k: NamedSharding(mesh, P(None, dpa, "model",
+                                         *([None] * (len(s) - 3))))
+                for k, (s, d) in cs.shapes.items()}
+
+        def prefill_step(params, tokens):
+            logits, cache = prefill(params, cfg, tokens,
+                                    cache_shardings=c_sh, last_only=True)
+            return logits[:, -1], cache
+
+    meta = dict(model_flops=2 * cfg.active_param_count() * B * S
+                + _attn_flops(cfg, B, S), tokens=B * S,
+                scan_trip=cfg.n_layers)
+    return Cell(arch, shape.name, prefill_step,
+                (p_spec, _sds((B, S), I32)), (p_sh, tok_sh), meta)
+
+
+def _attn_flops(cfg: TransformerConfig, B, S, causal=True):
+    hd = cfg.head_dim if cfg.mla is None else (
+        cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim
+        + cfg.mla.v_head_dim) // 2
+    f = 2 * B * cfg.n_heads * S * S * hd * 2  # qk + pv
+    return f // 2 if causal else f
+
+
+def _lm_decode_cell(arch, shape, cfg, mesh, long: bool = False):
+    p_spec = _eval_params(init_lm_params, cfg)
+    p_sh = param_shardings(p_spec, "lm", mesh)
+    B, S = shape["global_batch"], shape["seq_len"]
+    dp = dp_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    cs = cache_spec(cfg, B, S)
+    c_spec = {k: _sds(s, d) for k, (s, d) in cs.shapes.items()}
+    if long:
+        # batch=1: shard the *sequence* axis of the cache (data axis), model
+        # axis left for attention-head/TP sharding of the weights
+        c_sh = {k: NamedSharding(mesh, P(None, None, dpa,
+                                         *([None] * (len(s) - 3))))
+                for k, (s, d) in cs.shapes.items()}
+        tok_sh = _rep(mesh)
+    else:
+        # batch over data axes, sequence over model axis
+        c_sh = {k: NamedSharding(mesh, P(None, dpa, "model",
+                                         *([None] * (len(s) - 3))))
+                for k, (s, d) in cs.shapes.items()}
+        tok_sh = NamedSharding(mesh, P(dpa))
+
+    absorbed = cfg.mla is not None
+
+    def serve_step(params, cache, tokens, length):
+        return decode_step(params, cfg, cache, tokens, length,
+                           absorbed=absorbed)
+
+    kv_bytes = sum(int(np.prod(s)) * 2 for s, _ in cs.shapes.values())
+    meta = dict(model_flops=2 * cfg.active_param_count() * B
+                + 2 * B * kv_bytes,   # decode reads the whole cache
+                kv_cache_bytes=kv_bytes, tokens=B, scan_trip=cfg.n_layers)
+    return Cell(arch, shape.name, serve_step,
+                (p_spec, c_spec, _sds((B,), I32), _sds((), I32)),
+                (p_sh, c_sh, tok_sh, _rep(mesh)), meta)
+
+
+# --------------------------------------------------------------------------- #
+# GNN cells
+# --------------------------------------------------------------------------- #
+def _gnn_batch_specs(cfg: GNNConfig, N, E, d_feat, mesh, n_out):
+    from repro.distributed import ctx
+    dp = dp_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    e_sh = NamedSharding(mesh, P(dpa))
+    if ctx.CURRENT.gnn_replicate_nodes:
+        # §Perf gat iter 2: node arrays replicated -> src-feature gathers
+        # become local; only the (N, H)-sized aggregation partials reduce
+        n_sh = NamedSharding(mesh, P())
+        dpa = None
+    else:
+        n_sh = NamedSharding(mesh, P(dpa, None))
+    if cfg.kind == "graphcast":
+        labels = _sds((N, cfg.n_vars), F32)
+    elif cfg.kind == "schnet":
+        labels = _sds((N,), F32)
+    else:
+        labels = _sds((N,), I32)
+    gb = GraphBatch(
+        node_feats=_sds((N, d_feat), BF16),
+        edge_src=_sds((E,), I32), edge_dst=_sds((E,), I32),
+        edge_mask=_sds((E,), BOOL), labels=labels,
+        label_mask=_sds((N,), BOOL),
+        positions=_sds((N, 3), F32) if cfg.kind == "schnet" else None,
+        graph_id=None)
+    gb_sh = GraphBatch(
+        node_feats=n_sh, edge_src=e_sh, edge_dst=e_sh, edge_mask=e_sh,
+        labels=NamedSharding(mesh, P(dpa, None)) if cfg.kind == "graphcast"
+        else NamedSharding(mesh, P(dpa)),
+        label_mask=NamedSharding(mesh, P(dpa)),
+        positions=n_sh if cfg.kind == "schnet" else None,
+        graph_id=None)
+    return gb, gb_sh
+
+
+def _dp_total(mesh):
+    t = 1
+    for a in dp_axes(mesh):
+        t *= mesh.shape[a]
+    return t
+
+
+def _gnn_cell(arch, shape, cfg: GNNConfig, mesh, opt: AdamWConfig):
+    n_out = cfg.n_classes
+    if shape.kind == "minibatch":
+        N, E = sample_capacities(shape["batch_nodes"],
+                                 (shape["fanout0"], shape["fanout1"]))
+    elif shape.kind == "batched_graphs":
+        N = shape["n_nodes"] * shape["batch"]
+        E = shape["n_edges"] * 2 * shape["batch"]
+    else:
+        N, E = shape["n_nodes"], shape["n_edges"]
+    # pad node/edge counts to the DP width (masked padding is already part
+    # of the GraphBatch contract — the loaders pad the same way)
+    m = _dp_total(mesh)
+    N = -(-N // m) * m
+    E = -(-E // m) * m
+    d_feat = shape.dims.get("d_feat", 16)
+    p_spec = _eval_params(partial(init_gnn, cfg=cfg, d_feat=d_feat,
+                                  n_out=n_out)
+                          if False else lambda k: init_gnn(k, cfg, d_feat, n_out))
+    p_sh = param_shardings(p_spec, "gnn", mesh)
+    o_spec = jax.eval_shape(lambda p: init_opt_state(p, opt), p_spec)
+    o_sh = jax.tree.map(lambda _: _rep(mesh), o_spec)
+    gb, gb_sh = _gnn_batch_specs(cfg, N, E, d_feat, mesh, n_out)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: gnn_loss(p, cfg, batch))(params)
+        params, opt_state, info = adamw_update(params, grads, opt_state, opt)
+        return params, opt_state, loss, info["grad_norm"]
+
+    d = cfg.d_hidden
+    meta = dict(model_flops=int(cfg.n_layers * (4 * E * d * d + 8 * N * d * d)),
+                n_nodes=N, n_edges=E, scan_trip=cfg.n_layers)
+    return Cell(arch, shape.name, train_step,
+                (p_spec, o_spec, gb), (p_sh, o_sh, gb_sh), meta)
+
+
+# --------------------------------------------------------------------------- #
+# RecSys cells
+# --------------------------------------------------------------------------- #
+def _din_batch_specs(cfg: RecsysConfig, B, mesh):
+    dp = dp_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    if B % _dp_total(mesh) == 0:
+        b1 = NamedSharding(mesh, P(dpa))
+        b2 = NamedSharding(mesh, P(dpa, None))
+    else:  # tiny batches (retrieval B=1): replicate
+        b1 = b2 = NamedSharding(mesh, P())
+    T = cfg.seq_len
+    batch = DINBatch(
+        user_feats=_sds((B, 4), I32), target_item=_sds((B,), I32),
+        target_cate=_sds((B,), I32), hist_items=_sds((B, T), I32),
+        hist_cates=_sds((B, T), I32), hist_mask=_sds((B, T), BOOL),
+        labels=_sds((B,), F32))
+    sh = DINBatch(user_feats=b2, target_item=b1, target_cate=b1,
+                  hist_items=b2, hist_cates=b2, hist_mask=b2, labels=b1)
+    return batch, sh
+
+
+def _din_cell(arch, shape, cfg: RecsysConfig, mesh, opt: AdamWConfig):
+    p_spec = _eval_params(lambda k: init_din(k, cfg))
+    p_sh = param_shardings(p_spec, "recsys", mesh)
+    kind = shape.kind
+    d = cfg.embed_dim
+    if kind == "retrieval":
+        B, NC = shape["batch"], shape["n_candidates"]
+        all_ax = 1
+        for a in mesh.axis_names:
+            all_ax *= mesh.shape[a]
+        NC = -(-NC // all_ax) * all_ax     # pad candidate set to mesh width
+        batch, b_sh = _din_batch_specs(cfg, B, mesh)
+        cand_sh = NamedSharding(mesh, P(tuple(mesh.axis_names)))
+
+        def retrieval_step(params, batch, cand_items, cand_cates):
+            return retrieval_scores(params, cfg, batch, cand_items, cand_cates)
+
+        meta = dict(model_flops=2 * B * NC * 2 * d, candidates=NC)
+        return Cell(arch, shape.name, retrieval_step,
+                    (p_spec, batch, _sds((NC,), I32), _sds((NC,), I32)),
+                    (p_sh, b_sh, cand_sh, cand_sh), meta)
+    B = shape["batch"]
+    batch, b_sh = _din_batch_specs(cfg, B, mesh)
+    if kind == "train":
+        o_spec = jax.eval_shape(lambda p: init_opt_state(p, opt), p_spec)
+        o_sh = param_shardings(o_spec["mu"], "recsys", mesh)
+        o_shard = dict(mu=o_sh, nu=o_sh, step=_rep(mesh))
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: din_loss(p, cfg, batch))(params)
+            params, opt_state, info = adamw_update(params, grads, opt_state, opt)
+            return params, opt_state, loss, info["grad_norm"]
+
+        mlp_f = (4 * 2 * d) * cfg.attn_mlp[0] + cfg.attn_mlp[0] * cfg.attn_mlp[1]
+        meta = dict(model_flops=6 * B * (cfg.seq_len * mlp_f
+                                         + (7 * d) * cfg.mlp[0]
+                                         + cfg.mlp[0] * cfg.mlp[1]))
+        return Cell(arch, shape.name, train_step,
+                    (p_spec, o_spec, batch), (p_sh, o_shard, b_sh), meta)
+
+    def serve_step(params, batch):
+        from repro.models.recsys import din_logits
+        return jax.nn.sigmoid(din_logits(params, cfg, batch))
+
+    mlp_f = (4 * 2 * d) * cfg.attn_mlp[0] + cfg.attn_mlp[0] * cfg.attn_mlp[1]
+    meta = dict(model_flops=2 * B * (cfg.seq_len * mlp_f
+                                     + (7 * d) * cfg.mlp[0]
+                                     + cfg.mlp[0] * cfg.mlp[1]))
+    return Cell(arch, shape.name, serve_step, (p_spec, batch),
+                (p_sh, b_sh), meta)
+
+
+# --------------------------------------------------------------------------- #
+# entry
+# --------------------------------------------------------------------------- #
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh,
+               opt: AdamWConfig | None = None, remat: bool = True,
+               variant: str = "baseline") -> Cell:
+    """variant='baseline' is the paper-faithful configuration; 'opt' turns
+    on the hillclimbed optimizations (EXPERIMENTS.md §Perf) via ctx flags +
+    spec-level changes. Baseline artifacts stay reproducible."""
+    from repro.distributed import ctx
+    ctx.reset()
+    dp = dp_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    if variant == "opt":
+        ctx.set_flags(dp_axes=dpa, moe_ep_constrain=True, gnn_bf16_msgs=True)
+    elif variant == "opt2":
+        ctx.set_flags(dp_axes=dpa, moe_tp=True, gnn_bf16_msgs=True,
+                      gnn_replicate_nodes=True)
+    elif variant == "opt3":
+        # deepseek iter 3: baseline EP sharding, tighter dispatch capacity
+        ctx.set_flags(dp_axes=dpa, moe_capacity_factor=1.0,
+                      gnn_replicate_nodes=True, gnn_bf16_msgs=True)
+    opt = opt or AdamWConfig()
+    ac = get_config(arch_id)
+    cfg = ac.model
+    shape = ac.shape(shape_name)
+    if cfg.family == "lm":
+        if cfg.name == "deepseek-v3-671b":
+            opt = dataclasses.replace(opt, moment_dtype="bfloat16")
+        if shape.kind == "train":
+            return _lm_train_cell(arch_id, shape, cfg, mesh, opt, remat)
+        if shape.kind == "prefill":
+            return _lm_prefill_cell(arch_id, shape, cfg, mesh, variant)
+        if shape.kind == "decode":
+            return _lm_decode_cell(arch_id, shape, cfg, mesh, long=False)
+        if shape.kind == "long_decode":
+            return _lm_decode_cell(arch_id, shape, cfg, mesh, long=True)
+    if cfg.family == "gnn":
+        return _gnn_cell(arch_id, shape, cfg, mesh, opt)
+    if cfg.family == "recsys":
+        return _din_cell(arch_id, shape, cfg, mesh, opt)
+    raise KeyError((arch_id, shape_name))

@@ -1,0 +1,74 @@
+"""Training launcher: ``python -m repro.launch.train --arch qwen1.5-0.5b
+--scale 0.1 --steps 200``.
+
+On this CPU container it trains a width/depth-scaled variant of the chosen
+arch with the full production stack (sharded params if >1 device, AdamW,
+async checkpoints, fault-tolerant run loop). On a real pod the same entry
+point runs the full config (``--scale 1``).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_reduced
+from repro.data import Prefetcher, lm_token_stream
+from repro.models.transformer import init_lm_params, lm_loss
+from repro.optim import AdamWConfig
+from repro.runtime import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="use the smoke-test reduced config (CPU-sized)")
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8_ef"])
+    ap.add_argument("--d-model", type=int, default=0,
+                    help="override width (e.g. ~100M model: 768)")
+    ap.add_argument("--n-layers", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch).model
+    assert cfg.family == "lm", "train.py drives LM archs; see examples/ for others"
+    over = {}
+    if args.d_model:
+        over["d_model"] = args.d_model
+    if args.n_layers:
+        over["n_layers"] = args.n_layers
+    if over:
+        cfg = dataclasses.replace(cfg, **over)
+    print(f"[train] arch={args.arch} layers={cfg.n_layers} d={cfg.d_model} "
+          f"params~{cfg.param_count()/1e6:.1f}M devices={len(jax.devices())}")
+
+    params = init_lm_params(jax.random.PRNGKey(0), cfg)
+    loss_fn = lambda p, b: lm_loss(p, cfg, jnp.asarray(b["tokens"]),
+                                   jnp.asarray(b["labels"]))
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                      total_steps=args.steps)
+    tcfg = TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                         grad_compression=args.grad_compression)
+    tr = Trainer(loss_fn, params, opt, tcfg)
+    if args.resume and tr.restore():
+        print(f"[train] resumed from step {tr.step}")
+    data = Prefetcher(lm_token_stream(cfg.vocab, args.batch, args.seq, seed=1))
+    hist = tr.run(data, args.steps)
+    print(f"[train] done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f} "
+          f"median step {1e3 * sorted(h['secs'] for h in hist)[len(hist)//2]:.0f}ms")
+    tr.save(blocking=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+from repro.models.transformer import (init_lm_params, lm_forward, lm_loss,
+                                      prefill, decode_step, init_cache,
+                                      cache_spec)
+from repro.models.gnn import GraphBatch, init_gnn, gnn_forward, gnn_loss
+from repro.models.recsys import (DINBatch, init_din, din_logits, din_loss,
+                                 retrieval_scores, embedding_bag)
+from repro.models.layers import flash_attention, moe_block, rms_norm
+
+__all__ = [
+    "init_lm_params", "lm_forward", "lm_loss", "prefill", "decode_step",
+    "init_cache", "cache_spec", "GraphBatch", "init_gnn", "gnn_forward",
+    "gnn_loss", "DINBatch", "init_din", "din_logits", "din_loss",
+    "retrieval_scores", "embedding_bag", "flash_attention", "moe_block",
+    "rms_norm",
+]

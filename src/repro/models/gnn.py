@@ -1,0 +1,335 @@
+"""GNN model zoo: graphcast (encode-process-decode interaction net), schnet
+(continuous-filter conv), pna (multi-aggregator), gat (attention).
+
+Message passing is built on ``jax.ops.segment_sum`` / ``segment_max`` over an
+edge index — JAX has no sparse SpMM; the scatter/gather IS the system (see
+kernel_taxonomy §GNN). One uniform batch format serves all four:
+
+    GraphBatch: node_feats (N, F), edge_src/edge_dst (E,), edge_mask (E,),
+                positions (N, 3) [schnet], graph_id (N,) [molecule readout],
+                labels / label_mask.
+
+The distributed story (full-batch ogb_products on 256 chips) shards the edge
+arrays over 'data'; ``segment_sum`` over sharded edges lowers to a
+reduce-scatter/all-reduce of partial node aggregates — exactly the paper's
+fetch/aggregate pattern mapped onto GSPMD (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.models.layers import _init
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class GraphBatch:
+    node_feats: jnp.ndarray          # (N, F)
+    edge_src: jnp.ndarray            # (E,) int32
+    edge_dst: jnp.ndarray            # (E,) int32
+    edge_mask: jnp.ndarray           # (E,) bool
+    labels: jnp.ndarray              # (N,) int32 or (N, n_vars) float
+    label_mask: jnp.ndarray          # (N,) bool
+    positions: jnp.ndarray | None = None   # (N, 3) for schnet
+    graph_id: jnp.ndarray | None = None    # (N,) for batched molecules
+
+
+def _mlp_init(key, dims, dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [dict(w=_init(ks[i], (dims[i], dims[i + 1]), dtype=dtype),
+                 b=jnp.zeros((dims[i + 1],), dtype)) for i in range(len(dims) - 1)]
+
+
+def _mlp(params, x, act=jax.nn.silu, final_act=False):
+    for i, lyr in enumerate(params):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < len(params) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def _seg_sum(x, idx, n):
+    return jax.ops.segment_sum(x, idx, num_segments=n)
+
+
+def _seg_mean(x, idx, n, mask):
+    s = _seg_sum(x, idx, n)
+    c = _seg_sum(mask.astype(x.dtype)[:, None], idx, n)
+    return s / jnp.maximum(c, 1)
+
+
+def _seg_max(x, idx, n):
+    return jax.ops.segment_max(x, idx, num_segments=n, indices_are_sorted=False)
+
+
+# =========================================================================== #
+# GraphCast-style encode-process-decode interaction network
+# =========================================================================== #
+def init_graphcast(key, cfg: GNNConfig, d_feat: int):
+    dt = DTYPES[cfg.dtype]
+    d = cfg.d_hidden
+    ks = jax.random.split(key, 4 + cfg.n_layers)
+    enc_node = _mlp_init(ks[0], (d_feat, d, d), dt)
+    enc_edge = _mlp_init(ks[1], (2 * d, d, d), dt)
+    layers = []
+    for i in range(cfg.n_layers):
+        k1, k2 = jax.random.split(ks[3 + i])
+        layers.append(dict(edge_mlp=_mlp_init(k1, (3 * d, d, d), dt),
+                           node_mlp=_mlp_init(k2, (2 * d, d, d), dt)))
+    layers = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    dec = _mlp_init(ks[2], (d, d, cfg.n_vars), dt)
+    return dict(enc_node=enc_node, enc_edge=enc_edge, layers=layers, dec=dec)
+
+
+def graphcast_forward(params, cfg: GNNConfig, gb: GraphBatch):
+    N = gb.node_feats.shape[0]
+    dt = DTYPES[cfg.dtype]
+    h = _mlp(params["enc_node"], gb.node_feats.astype(dt))
+    e = _mlp(params["enc_edge"],
+             jnp.concatenate([h[gb.edge_src], h[gb.edge_dst]], -1))
+    m = gb.edge_mask[:, None].astype(dt)
+
+    def body(carry, lyr):
+        h, e = carry
+        e_in = jnp.concatenate([e, h[gb.edge_src], h[gb.edge_dst]], -1)
+        e = e + _mlp(lyr["edge_mlp"], e_in) * m
+        agg = _seg_sum(e * m, gb.edge_dst, N)
+        h = h + _mlp(lyr["node_mlp"], jnp.concatenate([h, agg], -1))
+        return (h, e), None
+
+    (h, e), _ = jax.lax.scan(body, (h, e), params["layers"])
+    return _mlp(params["dec"], h)                       # (N, n_vars)
+
+
+# =========================================================================== #
+# SchNet
+# =========================================================================== #
+def init_schnet(key, cfg: GNNConfig, d_feat: int):
+    dt = DTYPES[cfg.dtype]
+    d, R = cfg.d_hidden, cfg.n_rbf
+    ks = jax.random.split(key, 2 + 3 * cfg.n_layers)
+    emb = _mlp_init(ks[0], (d_feat, d), dt)
+    layers = []
+    for i in range(cfg.n_layers):
+        k1, k2, k3 = jax.random.split(ks[1 + i], 3)
+        layers.append(dict(filt=_mlp_init(k1, (R, d, d), dt),
+                           w_in=_init(k2, (d, d), dtype=dt),
+                           out=_mlp_init(k3, (d, d, d), dt)))
+    layers = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    head = _mlp_init(ks[-1], (d, d // 2, 1), dt)
+    return dict(emb=emb, layers=layers, head=head)
+
+
+def _rbf(dist, n_rbf: int, cutoff: float):
+    centers = jnp.linspace(0.0, cutoff, n_rbf)
+    gamma = n_rbf / cutoff
+    return jnp.exp(-gamma * (dist[:, None] - centers) ** 2)
+
+
+def schnet_forward(params, cfg: GNNConfig, gb: GraphBatch):
+    """Continuous-filter convolution; returns per-node scalar (summed into a
+    per-graph energy when graph_id is present)."""
+    N = gb.node_feats.shape[0]
+    dt = DTYPES[cfg.dtype]
+    pos = gb.positions
+    assert pos is not None, "schnet needs positions"
+    h = _mlp(params["emb"], gb.node_feats.astype(dt))
+    dvec = pos[gb.edge_src] - pos[gb.edge_dst]
+    dist = jnp.sqrt((dvec * dvec).sum(-1) + 1e-12)
+    rbf = _rbf(dist, cfg.n_rbf, cfg.cutoff).astype(dt)
+    # cosine cutoff envelope
+    env = 0.5 * (jnp.cos(jnp.pi * jnp.clip(dist / cfg.cutoff, 0, 1)) + 1)
+    m = (gb.edge_mask * (dist < cfg.cutoff)).astype(dt)[:, None] * env[:, None].astype(dt)
+
+    def body(h, lyr):
+        W = _mlp(lyr["filt"], rbf)                      # (E, d)
+        msg = (h @ lyr["w_in"])[gb.edge_src] * W * m
+        agg = _seg_sum(msg, gb.edge_dst, N)
+        return h + _mlp(lyr["out"], agg), None
+
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    atom_out = _mlp(params["head"], h)[:, 0]            # (N,)
+    return atom_out
+
+
+# =========================================================================== #
+# PNA
+# =========================================================================== #
+def init_pna(key, cfg: GNNConfig, d_feat: int, n_out: int):
+    dt = DTYPES[cfg.dtype]
+    d = cfg.d_hidden
+    n_tow = len(cfg.aggregators) * len(cfg.scalers)
+    ks = jax.random.split(key, 3 + cfg.n_layers)
+    enc = _mlp_init(ks[0], (d_feat, d), dt)
+    layers = []
+    for i in range(cfg.n_layers):
+        k1, k2 = jax.random.split(ks[1 + i])
+        layers.append(dict(pre=_mlp_init(k1, (2 * d, d), dt),
+                           post=_mlp_init(k2, (n_tow * d + d, d), dt)))
+    layers = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    dec = _mlp_init(ks[-1], (d, n_out), dt)
+    return dict(enc=enc, layers=layers, dec=dec)
+
+
+def pna_forward(params, cfg: GNNConfig, gb: GraphBatch, avg_log_deg: float = 2.0):
+    N = gb.node_feats.shape[0]
+    dt = DTYPES[cfg.dtype]
+    h = _mlp(params["enc"], gb.node_feats.astype(dt))
+    mask = gb.edge_mask
+    deg = _seg_sum(mask.astype(jnp.float32)[:, None], gb.edge_dst, N)[:, 0]
+    log_deg = jnp.log1p(deg)[:, None].astype(dt)
+
+    def body(h, lyr):
+        msg = _mlp(lyr["pre"], jnp.concatenate([h[gb.edge_src], h[gb.edge_dst]], -1))
+        msg = msg * mask[:, None].astype(dt)
+        aggs = []
+        mean = _seg_mean(msg, gb.edge_dst, N, mask)
+        for a in cfg.aggregators:
+            if a == "mean":
+                aggs.append(mean)
+            elif a == "max":
+                mx = _seg_max(jnp.where(mask[:, None], msg, -1e9).astype(
+                    jnp.float32), gb.edge_dst, N)
+                aggs.append(jnp.where(deg[:, None] > 0, mx, 0).astype(dt))
+            elif a == "min":
+                mn = -_seg_max(jnp.where(mask[:, None], -msg, -1e9).astype(
+                    jnp.float32), gb.edge_dst, N)
+                aggs.append(jnp.where(deg[:, None] > 0, mn, 0).astype(dt))
+            elif a == "std":
+                sq = _seg_mean(msg * msg, gb.edge_dst, N, mask)
+                var = jnp.maximum((sq - mean * mean).astype(jnp.float32), 0)
+                aggs.append(jnp.sqrt(var + 1e-5).astype(dt))  # eps: finite grad
+        towers = []
+        for agg in aggs:
+            for s in cfg.scalers:
+                if s == "identity":
+                    towers.append(agg)
+                elif s == "amplification":
+                    towers.append(agg * log_deg / avg_log_deg)
+                elif s == "attenuation":
+                    towers.append(agg * avg_log_deg / jnp.maximum(log_deg, 1e-3))
+        cat = jnp.concatenate(towers + [h], -1)
+        return h + _mlp(lyr["post"], cat), None
+
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    return _mlp(params["dec"], h)
+
+
+# =========================================================================== #
+# GAT
+# =========================================================================== #
+def init_gat(key, cfg: GNNConfig, d_feat: int, n_out: int):
+    dt = DTYPES[cfg.dtype]
+    d, H = cfg.d_hidden, cfg.n_heads
+    ks = jax.random.split(key, cfg.n_layers)
+    layers = []
+    dims_in = [d_feat] + [d * H] * (cfg.n_layers - 1)
+    dims_out = [d] * (cfg.n_layers - 1) + [n_out]
+    heads = [H] * (cfg.n_layers - 1) + [H]
+    for i in range(cfg.n_layers):
+        k1, k2, k3 = jax.random.split(ks[i], 3)
+        layers.append(dict(
+            w=_init(k1, (dims_in[i], heads[i] * dims_out[i]), dtype=dt),
+            a_src=_init(k2, (heads[i], dims_out[i]), dtype=dt),
+            a_dst=_init(k3, (heads[i], dims_out[i]), dtype=dt)))
+    return dict(layers=layers)
+
+
+def gat_forward(params, cfg: GNNConfig, gb: GraphBatch):
+    """SDDMM edge scores -> segment softmax -> SpMM. Last layer averages
+    heads (classification head), earlier layers concat + ELU.
+
+    ``ctx.CURRENT.gnn_bf16_msgs`` keeps the segment-softmax partials and
+    messages in bf16 — on an edge-sharded full-batch graph every segment op
+    all-reduces an (N, H)/(N, H, d) partial across the data axis, so the
+    payload dtype directly scales the collective term (§Perf iteration on
+    gat-cora x ogb_products)."""
+    from repro.distributed import ctx as _ctx
+    bf16_msgs = _ctx.CURRENT.gnn_bf16_msgs
+    acc_dt = jnp.bfloat16 if bf16_msgs else jnp.float32
+    N = gb.node_feats.shape[0]
+    dt = DTYPES[cfg.dtype]
+    h = gb.node_feats.astype(dt)
+    mask = gb.edge_mask
+    n_layers = len(params["layers"])
+    for i, lyr in enumerate(params["layers"]):
+        H, dout = lyr["a_src"].shape           # static from weight shapes
+        hw = (h @ lyr["w"]).reshape(N, H, dout)
+        s_src = (hw * lyr["a_src"]).sum(-1)             # (N, H)
+        s_dst = (hw * lyr["a_dst"]).sum(-1)
+        score = jax.nn.leaky_relu(
+            s_src[gb.edge_src] + s_dst[gb.edge_dst], 0.2).astype(jnp.float32)
+        score = jnp.where(mask[:, None], score, -jnp.inf)
+        smax = _seg_max(score, gb.edge_dst, N)          # (N, H) f32 (exactness)
+        ex = jnp.exp(score - smax[gb.edge_dst]).astype(acc_dt)
+        ex = jnp.where(mask[:, None], ex, 0)
+        den = _seg_sum(ex, gb.edge_dst, N)
+        alpha = (ex.astype(jnp.float32)
+                 / jnp.maximum(den.astype(jnp.float32)[gb.edge_dst], 1e-9)
+                 ).astype(dt)
+        out = _seg_sum((alpha[..., None] * hw[gb.edge_src]).astype(acc_dt),
+                       gb.edge_dst, N)
+        if i < n_layers - 1:
+            h = jax.nn.elu(out.astype(jnp.float32)).astype(dt).reshape(
+                N, H * dout)
+        else:
+            h = out.astype(jnp.float32).mean(axis=1)    # (N, n_out)
+    return h
+
+
+# =========================================================================== #
+# uniform entry points
+# =========================================================================== #
+def init_gnn(key, cfg: GNNConfig, d_feat: int, n_out: int):
+    if cfg.kind == "graphcast":
+        return init_graphcast(key, cfg, d_feat)
+    if cfg.kind == "schnet":
+        return init_schnet(key, cfg, d_feat)
+    if cfg.kind == "pna":
+        return init_pna(key, cfg, d_feat, n_out)
+    if cfg.kind == "gat":
+        return init_gat(key, cfg, d_feat, n_out)
+    raise KeyError(cfg.kind)
+
+
+def gnn_forward(params, cfg: GNNConfig, gb: GraphBatch):
+    if cfg.kind == "graphcast":
+        return graphcast_forward(params, cfg, gb)
+    if cfg.kind == "schnet":
+        return schnet_forward(params, cfg, gb)
+    if cfg.kind == "pna":
+        return pna_forward(params, cfg, gb)
+    if cfg.kind == "gat":
+        return gat_forward(params, cfg, gb)
+    raise KeyError(cfg.kind)
+
+
+def gnn_loss(params, cfg: GNNConfig, gb: GraphBatch):
+    out = gnn_forward(params, cfg, gb)
+    mask = gb.label_mask.astype(jnp.float32)
+    if cfg.kind == "schnet":
+        # per-graph energy regression (sum-pool over graph_id when present)
+        if gb.graph_id is not None:
+            n_graphs = int(gb.labels.shape[0])
+            energy = jax.ops.segment_sum(out, gb.graph_id, num_segments=n_graphs)
+            err = (energy - gb.labels.astype(jnp.float32)) ** 2
+            return err.mean()
+        err = (out - gb.labels.astype(jnp.float32)) ** 2
+        return (err * mask).sum() / jnp.maximum(mask.sum(), 1)
+    if cfg.kind == "graphcast":
+        err = (out.astype(jnp.float32) - gb.labels.astype(jnp.float32)) ** 2
+        return (err.mean(-1) * mask).sum() / jnp.maximum(mask.sum(), 1)
+    # classification (gat, pna)
+    logits = out.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(
+        logits, gb.labels[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    ce = lse - picked
+    return (ce * mask).sum() / jnp.maximum(mask.sum(), 1)

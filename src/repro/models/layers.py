@@ -1,0 +1,363 @@
+"""Transformer building blocks — raw JAX, explicit param pytrees.
+
+Everything here is shape-polymorphic over a leading batch axis and written
+so that ``jax.lax.scan`` over stacked per-layer weights compiles one block
+regardless of depth (critical for the 61-layer DeepSeek-V3 dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, MoEConfig, TransformerConfig
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else (1.0 / max(shape[0], 1)) ** 0.5
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# norms / rope / mlp
+# --------------------------------------------------------------------------- #
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def rope_angles(positions: jnp.ndarray, dim: int, theta: float) -> tuple:
+    """positions (...,) -> (cos, sin) of shape (..., dim//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x (..., S, H, D); cos/sin (..., S, D//2) broadcast over heads."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c, s = cos[..., None, :], sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jnp.ndarray, wg: jnp.ndarray, wu: jnp.ndarray,
+           wd: jnp.ndarray) -> jnp.ndarray:
+    return (jax.nn.silu(x @ wg) * (x @ wu)) @ wd
+
+
+# --------------------------------------------------------------------------- #
+# attention (chunked online-softmax — pure-JAX flash; ref for the Pallas kernel)
+# --------------------------------------------------------------------------- #
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, q_chunk: int = 1024,
+                    kv_chunk: int = 1024, q_offset=0) -> jnp.ndarray:
+    """q (B, Sq, H, D), k/v (B, Skv, Hk, D) with H % Hk == 0 (GQA).
+
+    Online-softmax over kv chunks; O(S) memory. ``q_offset`` is the absolute
+    position of q[0] (for causal masking during chunked prefill/decode)."""
+    B, Sq, H, D = q.shape
+    _, Skv, Hk, _ = k.shape
+    Dv = v.shape[-1]          # may differ from D (MLA: v_head_dim != qk dim)
+    rep = H // Hk
+    scale = D ** -0.5
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    nq = -(-Sq // q_chunk)
+    nk = -(-Skv // kv_chunk)
+    q_pad = nq * q_chunk - Sq
+    k_pad = nk * kv_chunk - Skv
+    qq = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+    kk = jnp.pad(k, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+    vv = jnp.pad(v, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+    qq = qq.reshape(B, nq, q_chunk, H, D)
+    kk = kk.reshape(B, nk, kv_chunk, Hk, D)
+    vv = vv.reshape(B, nk, kv_chunk, Hk, Dv)
+
+    q_pos = q_offset + jnp.arange(nq * q_chunk).reshape(nq, q_chunk)
+    k_pos = jnp.arange(nk * kv_chunk).reshape(nk, kv_chunk)
+    k_valid = (jnp.arange(nk * kv_chunk) < Skv).reshape(nk, kv_chunk)
+
+    def per_q_chunk(qc, qp):
+        # qc (B, qch, H, D); scan over kv chunks
+        def body(carry, inp):
+            m, l, o = carry
+            kc, vc, kp, kval = inp
+            kr = jnp.repeat(kc, rep, axis=2)      # (B, kch, H, D)
+            vr = jnp.repeat(vc, rep, axis=2)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qc, kr,
+                           preferred_element_type=jnp.float32) * scale
+            mask = kval[None, None, None, :]
+            if causal:
+                mask = mask & (qp[None, None, :, None] >= kp[None, None, None, :])
+            s = jnp.where(mask, s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            o_new = o * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vr.astype(jnp.float32))
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, H, qc.shape[1]), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, qc.shape[1]), jnp.float32)
+        o0 = jnp.zeros((B, H, qc.shape[1], Dv), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(
+            body, (m0, l0, o0),
+            (jnp.moveaxis(kk, 1, 0), jnp.moveaxis(vv, 1, 0), k_pos, k_valid))
+        out = o / jnp.maximum(l[..., None], 1e-30)
+        return jnp.einsum("bhqd->bqhd", out)
+
+    out = jax.lax.map(lambda args: per_q_chunk(*args),
+                      (jnp.moveaxis(qq, 1, 0), q_pos))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, nq * q_chunk, H, Dv)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     length) -> jnp.ndarray:
+    """Single-token decode: q (B, 1, H, D) against cache (B, S, Hk, D).
+    ``length`` masks positions >= current length (scalar or (B,))."""
+    B, _, H, D = q.shape
+    _, S, Hk, _ = k_cache.shape
+    rep = H // Hk
+    kr = jnp.repeat(k_cache, rep, axis=2)
+    vr = jnp.repeat(v_cache, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kr,
+                   preferred_element_type=jnp.float32) * D ** -0.5
+    pos = jnp.arange(S)
+    ln = jnp.asarray(length)
+    mask = pos[None, :] < (ln[:, None] if ln.ndim else ln)
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# GQA attention block
+# --------------------------------------------------------------------------- #
+def init_gqa_params(key, cfg: TransformerConfig, dtype):
+    d, H, Hk, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = dict(
+        wq=_init(ks[0], (d, H * Dh), dtype=dtype),
+        wk=_init(ks[1], (d, Hk * Dh), dtype=dtype),
+        wv=_init(ks[2], (d, Hk * Dh), dtype=dtype),
+        wo=_init(ks[3], (H * Dh, d), dtype=dtype),
+    )
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * Dh,), dtype)
+        p["bk"] = jnp.zeros((Hk * Dh,), dtype)
+        p["bv"] = jnp.zeros((Hk * Dh,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((Dh,), dtype)
+        p["k_norm"] = jnp.ones((Dh,), dtype)
+    return p
+
+
+def gqa_qkv(p, cfg: TransformerConfig, x, positions):
+    """x (B, S, d) -> q (B,S,H,Dh), k/v (B,S,Hk,Dh) with rope (+qk_norm)."""
+    B, S, _ = x.shape
+    H, Hk, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, Dh)
+    k = k.reshape(B, S, Hk, Dh)
+    v = v.reshape(B, S, Hk, Dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    cos, sin = rope_angles(positions, Dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+# --------------------------------------------------------------------------- #
+# MLA (DeepSeek multi-head latent attention)
+# --------------------------------------------------------------------------- #
+def init_mla_params(key, cfg: TransformerConfig, dtype):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 8)
+    return dict(
+        w_dq=_init(ks[0], (d, m.q_lora_rank), dtype=dtype),
+        q_norm=jnp.ones((m.q_lora_rank,), dtype),
+        w_uq=_init(ks[1], (m.q_lora_rank, H * qk_head), dtype=dtype),
+        w_dkv=_init(ks[2], (d, m.kv_lora_rank), dtype=dtype),
+        kv_norm=jnp.ones((m.kv_lora_rank,), dtype),
+        w_kr=_init(ks[3], (d, m.qk_rope_head_dim), dtype=dtype),
+        w_uk=_init(ks[4], (m.kv_lora_rank, H * m.qk_nope_head_dim), dtype=dtype),
+        w_uv=_init(ks[5], (m.kv_lora_rank, H * m.v_head_dim), dtype=dtype),
+        wo=_init(ks[6], (H * m.v_head_dim, d), dtype=dtype),
+    )
+
+
+def mla_compress(p, cfg: TransformerConfig, x, positions):
+    """x (B,S,d) -> (c_kv (B,S,r), k_rope (B,S,1,Dr)) — what the KV cache
+    stores (the MLA memory saving)."""
+    m = cfg.mla
+    c_kv = rms_norm(x @ p["w_dkv"], p["kv_norm"], cfg.norm_eps)
+    k_r = (x @ p["w_kr"]).reshape(*x.shape[:-1], 1, m.qk_rope_head_dim)
+    cos, sin = rope_angles(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    k_r = apply_rope(k_r, cos, sin)
+    return c_kv, k_r
+
+
+def mla_queries(p, cfg: TransformerConfig, x, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    cq = rms_norm(x @ p["w_dq"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["w_uq"]).reshape(B, S, H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    cos, sin = rope_angles(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    return q_nope, q_rope
+
+
+def mla_expand_kv(p, cfg: TransformerConfig, c_kv):
+    """Naive execution: materialize per-head k_nope / v from the latent."""
+    m = cfg.mla
+    B, S, _ = c_kv.shape
+    H = cfg.n_heads
+    k_nope = (c_kv @ p["w_uk"]).reshape(B, S, H, m.qk_nope_head_dim)
+    v = (c_kv @ p["w_uv"]).reshape(B, S, H, m.v_head_dim)
+    return k_nope, v
+
+
+def mla_absorbed_decode(p, cfg: TransformerConfig, x, c_kv_cache, kr_cache,
+                        length, positions):
+    """Weight-absorbed MLA decode: attention runs in the *latent* space —
+    no per-head K/V materialization over the 500k cache (DeepSeek-V2 §
+    "absorb W_UK into W_UQ"). q_nope @ W_uk -> latent queries against c_kv;
+    output combines with W_uv afterwards."""
+    m = cfg.mla
+    B, S, r = c_kv_cache.shape
+    H = cfg.n_heads
+    q_nope, q_rope = mla_queries(p, cfg, x, positions)       # (B,1,H,*)
+    w_uk = p["w_uk"].reshape(r, H, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)       # (B,1,H,r)
+    s_lat = jnp.einsum("bqhr,bkr->bhqk", q_lat,
+                       c_kv_cache.astype(q_lat.dtype),
+                       preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bqhd,bkd->bhqk", q_rope,
+                        kr_cache[:, :, 0].astype(q_rope.dtype),
+                        preferred_element_type=jnp.float32)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s = (s_lat + s_rope) * scale
+    ln = jnp.asarray(length)
+    mask = jnp.arange(S)[None, :] < (ln[:, None] if ln.ndim else ln)
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhqk,bkr->bqhr", pattn,
+                       c_kv_cache.astype(jnp.float32))       # (B,1,H,r)
+    w_uv = p["w_uv"].reshape(r, H, m.v_head_dim)
+    o = jnp.einsum("bqhr,rhd->bqhd", o_lat.astype(x.dtype), w_uv)
+    return o.reshape(B, 1, H * m.v_head_dim) @ p["wo"]
+
+
+# --------------------------------------------------------------------------- #
+# MoE
+# --------------------------------------------------------------------------- #
+def init_moe_params(key, cfg: TransformerConfig, dtype):
+    mo = cfg.moe
+    d, E, f = cfg.d_model, mo.n_experts, mo.d_expert
+    ks = jax.random.split(key, 5)
+    p = dict(
+        router=_init(ks[0], (d, E), dtype=jnp.float32),
+        wg=_init(ks[1], (E, d, f), dtype=dtype),
+        wu=_init(ks[2], (E, d, f), dtype=dtype),
+        wd=_init(ks[3], (E, f, d), dtype=dtype),
+    )
+    if mo.router_aux_free:
+        p["router_bias"] = jnp.zeros((E,), jnp.float32)
+    if mo.n_shared:
+        fs = f * mo.n_shared
+        k2 = jax.random.split(ks[4], 3)
+        p["shared_wg"] = _init(k2[0], (d, fs), dtype=dtype)
+        p["shared_wu"] = _init(k2[1], (d, fs), dtype=dtype)
+        p["shared_wd"] = _init(k2[2], (fs, d), dtype=dtype)
+    return p
+
+
+def moe_block(p, cfg: TransformerConfig, x):
+    """Capacity-based top-k dispatch (sort-free scatter). x (B, S, d) ->
+    (y, aux_loss). Dropped tokens (over capacity) fall back to 0 (plus the
+    shared expert, if any) — standard capacity semantics.
+
+    With ``ctx.CURRENT.moe_ep_constrain`` the dispatch buffers carry
+    explicit EP shardings (experts over 'model', tokens over dp axes) so
+    GSPMD emits all-to-alls instead of gathering the token buffer across
+    the expert axis (§Perf iteration 1 on deepseek-v3 x train_4k)."""
+    from repro.distributed import ctx as _ctx
+    fl = _ctx.CURRENT
+    mo = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = mo.n_experts, mo.top_k
+    xt = x.reshape(T, d)
+    if fl.moe_ep_constrain:
+        xt = _ctx.constrain(xt, fl.dp_axes, None)
+    logits = xt.astype(jnp.float32) @ p["router"]
+    if mo.router_aux_free:
+        scores = jax.nn.sigmoid(logits)
+        sel_score, sel = jax.lax.top_k(scores + p["router_bias"], k)
+        gsel = jnp.take_along_axis(scores, sel, axis=-1)
+        gates = gsel / (gsel.sum(-1, keepdims=True) + 1e-9)
+        probs_mean = scores.mean(axis=0)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        gsel, sel = jax.lax.top_k(probs, k)
+        gates = gsel / (gsel.sum(-1, keepdims=True) + 1e-9)
+        probs_mean = probs.mean(axis=0)
+
+    cf = fl.moe_capacity_factor or mo.capacity_factor
+    C = max(int(T * k / E * cf), 1)
+    flat_e = sel.reshape(-1)                                 # (T*k,)
+    flat_g = gates.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    # position of each (token, expert) pair within its expert via stable
+    # sort-by-expert (O(Tk log Tk) instead of a (Tk, E) one-hot cumsum);
+    # deterministic priority = token order
+    sort_idx = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[sort_idx]
+    first = jax.vmap(lambda v: jnp.searchsorted(sorted_e, v))(sorted_e)
+    pos_sorted = jnp.arange(T * k, dtype=jnp.int32) - first.astype(jnp.int32)
+    pos_in_e = jnp.zeros((T * k,), jnp.int32).at[sort_idx].set(pos_sorted)
+    keep = pos_in_e < C
+    slot_e = jnp.where(keep, flat_e, 0)
+    slot_c = jnp.where(keep, pos_in_e, C - 1)
+    buf = jnp.zeros((E, C, d), x.dtype)
+    buf = buf.at[slot_e, slot_c].add(jnp.where(keep[:, None], xt[flat_t], 0))
+    if fl.moe_tp:
+        # TP-MoE: buf replicated over 'model' (dispatch is model-local);
+        # the expert GEMM is TP over f, reduced back at y
+        buf = _ctx.constrain(buf, None, None, None)
+    elif fl.moe_ep_constrain:
+        buf = _ctx.constrain(buf, "model", None, None)       # EP layout
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["wu"])
+    y_e = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, p["wd"])
+    if fl.moe_ep_constrain and not fl.moe_tp:
+        y_e = _ctx.constrain(y_e, "model", None, None)
+    y_tok = y_e[slot_e, slot_c]                              # (T*k, d)
+    y_tok = jnp.where(keep[:, None], y_tok, 0) * flat_g[:, None].astype(x.dtype)
+    y = jnp.zeros((T, d), x.dtype).at[flat_t].add(y_tok)
+    if fl.moe_ep_constrain:
+        y = _ctx.constrain(y, fl.dp_axes, None)
+    # load-balance aux (Switch-style); for aux-free routing it is only
+    # *reported* (router_bias is updated outside the gradient path)
+    frac_tok = jnp.mean(jax.nn.one_hot(sel, E, dtype=jnp.float32), axis=(0, 1))
+    aux = E * jnp.sum(frac_tok * probs_mean)
+    if mo.n_shared:
+        y = y + swiglu(xt, p["shared_wg"], p["shared_wu"], p["shared_wd"])
+    return y.reshape(B, S, d), aux

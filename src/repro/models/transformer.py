@@ -1,0 +1,482 @@
+"""LM transformer: dense GQA (qwen family), MoE (olmoe), MLA+MoE (deepseek-v3).
+
+Design points for the 512-chip dry-run:
+* ``jax.lax.scan`` over stacked per-layer weights — HLO size independent of
+  depth (61-layer DSv3 compiles as one block).
+* optional ``jax.checkpoint`` (remat) around the block — activation-memory
+  lever for the perf loop.
+* MoE layers run in a second scan (DeepSeek's ``first_k_dense`` prefix runs
+  dense); MTP head (depth-1) supported.
+* decode: per-layer KV cache, GQA (k, v) or MLA latent (c_kv, k_rope —
+  the paper-exact cache shrink), updated functionally.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TransformerConfig
+from repro.models.layers import (apply_rope, decode_attention, flash_attention,
+                                 gqa_qkv, init_gqa_params, init_mla_params,
+                                 init_moe_params, mla_absorbed_decode,
+                                 mla_compress, mla_expand_kv, mla_queries,
+                                 moe_block, rms_norm, rope_angles, swiglu,
+                                 _init)
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+def _dt(cfg):
+    return DTYPES[cfg.dtype]
+
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+def init_ffn_params(key, cfg: TransformerConfig, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    return dict(wg=_init(ks[0], (cfg.d_model, d_ff), dtype=dtype),
+                wu=_init(ks[1], (cfg.d_model, d_ff), dtype=dtype),
+                wd=_init(ks[2], (d_ff, cfg.d_model), dtype=dtype))
+
+
+def _init_block(key, cfg: TransformerConfig, moe: bool, dtype):
+    ks = jax.random.split(key, 3)
+    attn = (init_mla_params(ks[0], cfg, dtype) if cfg.mla is not None
+            else init_gqa_params(ks[0], cfg, dtype))
+    if moe:
+        ffn = init_moe_params(ks[1], cfg, dtype)
+    else:
+        d_ff = (cfg.moe.d_ff_dense if (cfg.moe and cfg.moe.first_k_dense)
+                else cfg.d_ff)
+        ffn = init_ffn_params(ks[1], cfg, d_ff, dtype)
+    return dict(attn=attn, ffn=ffn,
+                ln1=jnp.ones((cfg.d_model,), dtype),
+                ln2=jnp.ones((cfg.d_model,), dtype))
+
+
+def init_lm_params(key, cfg: TransformerConfig):
+    """Returns a pytree with per-layer weights stacked on axis 0 (two stacks
+    if the model mixes dense + MoE layers)."""
+    dtype = _dt(cfg)
+    n_dense = cfg.moe.first_k_dense if cfg.moe else cfg.n_layers
+    n_moe = cfg.n_layers - n_dense
+    keys = jax.random.split(key, 4)
+
+    def stack(key, n, moe):
+        if n == 0:
+            return None
+        ks = jax.random.split(key, n)
+        return jax.tree.map(lambda *xs: jnp.stack(xs),
+                            *[_init_block(k, cfg, moe, dtype) for k in ks])
+
+    params = dict(
+        embed=_init(keys[0], (cfg.vocab, cfg.d_model), scale=0.02, dtype=dtype),
+        dense_stack=stack(keys[1], n_dense, moe=False),
+        moe_stack=stack(keys[2], n_moe, moe=True),
+        final_norm=jnp.ones((cfg.d_model,), dtype),
+    )
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _init(keys[3], (cfg.d_model, cfg.vocab),
+                                  scale=0.02, dtype=dtype)
+    if cfg.mtp_depth:
+        km = jax.random.split(keys[3], 3)
+        params["mtp"] = dict(block=_init_block(km[0], cfg, moe=False, dtype=dtype),
+                             proj=_init(km[1], (2 * cfg.d_model, cfg.d_model),
+                                        dtype=dtype),
+                             norm=jnp.ones((cfg.d_model,), dtype))
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# forward
+# --------------------------------------------------------------------------- #
+def _attn_full(blk, cfg: TransformerConfig, x, positions, remat_chunks):
+    """Full-sequence (train/prefill) attention for one block."""
+    if cfg.mla is not None:
+        c_kv, k_r = mla_compress(blk["attn"], cfg, x, positions)
+        q_nope, q_rope = mla_queries(blk["attn"], cfg, x, positions)
+        k_nope, v = mla_expand_kv(blk["attn"], cfg, c_kv)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_r, k_nope.shape[:-1] + (k_r.shape[-1],))],
+            axis=-1)
+        o = flash_attention(q, k, v, causal=True)
+        B, S = x.shape[:2]
+        return o.reshape(B, S, -1) @ blk["attn"]["wo"]
+    q, k, v = gqa_qkv(blk["attn"], cfg, x, positions)
+    o = flash_attention(q, k, v, causal=True)
+    B, S = x.shape[:2]
+    return o.reshape(B, S, -1) @ blk["attn"]["wo"]
+
+
+def _block_fwd(blk, cfg: TransformerConfig, x, positions, moe: bool):
+    h = x + _attn_full(blk, cfg, rms_norm(x, blk["ln1"], cfg.norm_eps),
+                       positions, None)
+    hn = rms_norm(h, blk["ln2"], cfg.norm_eps)
+    if moe:
+        y, aux = moe_block(blk["ffn"], cfg, hn)
+    else:
+        y, aux = swiglu(hn, **blk["ffn"]), jnp.zeros((), jnp.float32)
+    return h + y, aux
+
+
+def lm_forward(params, cfg: TransformerConfig, tokens,
+               remat: bool = True):
+    """tokens (B, S) -> (logits (B, S, V), aux_loss)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(S)[None, :]
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def run_stack(x, stack, moe, aux):
+        if stack is None:
+            return x, aux
+
+        def body(carry, blk):
+            xx, aa = carry
+            fwd = partial(_block_fwd, cfg=cfg, positions=positions, moe=moe)
+            if remat:
+                fwd = jax.checkpoint(
+                    lambda b, v: _block_fwd(b, cfg, v, positions, moe))
+                out, aux_l = fwd(blk, xx)
+            else:
+                out, aux_l = _block_fwd(blk, cfg, xx, positions, moe)
+            return (out, aa + aux_l), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, aux), stack)
+        return x, aux
+
+    x, aux_total = run_stack(x, params.get("dense_stack"), False, aux_total)
+    x, aux_total = run_stack(x, params.get("moe_stack"), True, aux_total)
+    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = hidden @ head
+    return logits, aux_total, hidden
+
+
+def lm_forward_hidden(params, cfg: TransformerConfig, tokens,
+                      remat: bool = True):
+    """Like lm_forward but never materializes logits (loss is chunked)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(S)[None, :]
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def run_stack(x, stack, moe, aux):
+        if stack is None:
+            return x, aux
+
+        def body(carry, blk):
+            xx, aa = carry
+            if remat:
+                out, aux_l = jax.checkpoint(
+                    lambda b, v: _block_fwd(b, cfg, v, positions, moe))(blk, xx)
+            else:
+                out, aux_l = _block_fwd(blk, cfg, xx, positions, moe)
+            return (out, aa + aux_l), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, aux), stack)
+        return x, aux
+
+    x, aux_total = run_stack(x, params.get("dense_stack"), False, aux_total)
+    x, aux_total = run_stack(x, params.get("moe_stack"), True, aux_total)
+    hidden = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return None, aux_total, hidden
+
+
+def _ce(logits, labels, mask=None):
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = lse - picked
+    if mask is not None:
+        return (ce * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return ce.mean()
+
+
+def chunked_xent(hidden, head, labels, mask=None, chunk: int = 8192):
+    """Vocab-chunked cross entropy: never materializes the full (B, S, V)
+    f32 logits — an online-logsumexp scan over vocab chunks (the flash trick
+    applied to the LM head). Cuts the train-step temp memory by the vocab /
+    chunk factor; the head matmul stays TP-sharded over 'model'."""
+    B, S, d = hidden.shape
+    V = head.shape[1]
+    chunk = min(chunk, V)
+    nc = -(-V // chunk)
+    Vp = nc * chunk
+    headp = jnp.pad(head, ((0, 0), (0, Vp - V)))
+
+    def body(carry, ci):
+        m, s, picked = carry
+        hc = jax.lax.dynamic_slice(headp, (0, ci * chunk), (d, chunk))
+        lg = (hidden @ hc).astype(jnp.float32)           # (B, S, chunk)
+        col = jax.lax.broadcasted_iota(jnp.int32, (1, 1, chunk), 2) \
+            + ci * chunk
+        lg = jnp.where(col < V, lg, -jnp.inf)
+        m_new = jnp.maximum(m, lg.max(-1))
+        s = s * jnp.exp(m - m_new) + jnp.exp(
+            lg - m_new[..., None]).sum(-1)
+        in_chunk = (labels >= ci * chunk) & (labels < (ci + 1) * chunk)
+        idx = jnp.clip(labels - ci * chunk, 0, chunk - 1)
+        pick_c = jnp.take_along_axis(lg, idx[..., None], axis=-1)[..., 0]
+        picked = jnp.where(in_chunk, pick_c, picked)
+        return (m_new, s, picked), None
+
+    m0 = jnp.full((B, S), -jnp.inf, jnp.float32)
+    s0 = jnp.zeros((B, S), jnp.float32)
+    p0 = jnp.zeros((B, S), jnp.float32)
+    (m, s, picked), _ = jax.lax.scan(body, (m0, s0, p0), jnp.arange(nc))
+    ce = m + jnp.log(jnp.maximum(s, 1e-30)) - picked
+    if mask is not None:
+        return (ce * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return ce.mean()
+
+
+def sharded_xent(hidden, head, labels, mask=None, logits_sharding=None,
+                 hidden_sharding=None):
+    """CE that stays vocab-sharded end to end: bf16 logits (batch x vocab
+    2-D sharded), f32 reductions, and the label pick via an iota-compare
+    masked sum (no cross-shard gather). The explicit constraints matter:
+    without them GSPMD contracts the model-sharded hidden dim / all-gathers
+    the batch — 37 GiB f32 collectives per step (measured; EXPERIMENTS.md
+    §Perf)."""
+    if hidden_sharding is not None:
+        hidden = jax.lax.with_sharding_constraint(hidden, hidden_sharding)
+    logits = hidden @ head                               # (B, S, V) bf16
+    if logits_sharding is not None:
+        logits = jax.lax.with_sharding_constraint(logits, logits_sharding)
+    lg32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg32, axis=-1)
+    V = head.shape[-1]
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, 1, V), 2)
+    eq = col == labels[..., None]
+    picked = jnp.sum(jnp.where(eq, lg32, 0.0), axis=-1)
+    ce = lse - picked
+    if mask is not None:
+        return (ce * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return ce.mean()
+
+
+def lm_loss(params, cfg: TransformerConfig, tokens, labels,
+            aux_weight: float = 0.01, mtp_weight: float = 0.3,
+            remat: bool = True, xent: str = "sharded",
+            xent_chunk: int = 8192, logits_sharding=None,
+            hidden_sharding=None):
+    """Next-token CE (+ MoE aux loss + depth-1 MTP loss, DeepSeek-V3 style).
+    ``xent='sharded'`` keeps logits bf16 + vocab-sharded; ``'chunked'``
+    streams vocab chunks (never resident) — perf-loop option."""
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    _, aux, hidden = lm_forward_hidden(params, cfg, tokens, remat=remat)
+    if xent == "chunked":
+        loss = chunked_xent(hidden, head, labels, chunk=xent_chunk)
+    else:
+        loss = sharded_xent(hidden, head, labels,
+                            logits_sharding=logits_sharding,
+                            hidden_sharding=hidden_sharding)
+    if cfg.moe is not None and not cfg.moe.router_aux_free:
+        loss = loss + aux_weight * aux / max(cfg.n_layers, 1)
+    if cfg.mtp_depth and "mtp" in params:
+        # depth-1 MTP: h'_t = Block(Proj[norm(h_t) ; norm(emb(tok_{t+1}))]);
+        # logits'_t predicts labels_{t+1} (i.e., token t+2). Tail masked.
+        mtp = params["mtp"]
+        B, S = tokens.shape
+        nxt_emb = params["embed"][jnp.roll(tokens, -1, axis=1)]
+        cat = jnp.concatenate(
+            [rms_norm(hidden, mtp["norm"], cfg.norm_eps), nxt_emb], axis=-1)
+        h2 = cat @ mtp["proj"]
+        positions = jnp.arange(S)[None, :]
+        h2, _ = _block_fwd(mtp["block"], cfg, h2, positions, moe=False)
+        h2 = rms_norm(h2, params["final_norm"], cfg.norm_eps)
+        labels2 = jnp.roll(labels, -1, axis=1)
+        mask = (jnp.arange(S) < S - 1).astype(jnp.float32)[None, :]
+        if xent == "chunked":
+            loss = loss + mtp_weight * chunked_xent(h2, head, labels2, mask,
+                                                    chunk=xent_chunk)
+        else:
+            loss = loss + mtp_weight * sharded_xent(
+                h2, head, labels2, mask, logits_sharding=logits_sharding,
+                hidden_sharding=hidden_sharding)
+    return loss
+
+
+# --------------------------------------------------------------------------- #
+# KV-cache serving
+# --------------------------------------------------------------------------- #
+@dataclass
+class CacheSpec:
+    """Shapes of the per-layer decode cache."""
+    kind: str          # "gqa" | "mla"
+    shapes: dict
+
+
+def cache_spec(cfg: TransformerConfig, batch: int, max_len: int) -> CacheSpec:
+    L = cfg.n_layers
+    dt = _dt(cfg)
+    if cfg.mla is not None:
+        m = cfg.mla
+        return CacheSpec("mla", dict(
+            c_kv=((L, batch, max_len, m.kv_lora_rank), dt),
+            k_rope=((L, batch, max_len, m.qk_rope_head_dim), dt)))
+    return CacheSpec("gqa", dict(
+        k=((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt),
+        v=((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt)))
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int):
+    spec = cache_spec(cfg, batch, max_len)
+    return {k: jnp.zeros(s, d) for k, (s, d) in spec.shapes.items()}
+
+
+def _stack_blocks(params, cfg):
+    """Concatenate dense+moe stacks into per-layer python list views is not
+    scan-able; instead yield (stack, moe?, n_layers) segments."""
+    segs = []
+    if params.get("dense_stack") is not None:
+        n = cfg.moe.first_k_dense if cfg.moe else cfg.n_layers
+        segs.append((params["dense_stack"], False, n))
+    if params.get("moe_stack") is not None:
+        segs.append((params["moe_stack"], True,
+                     cfg.n_layers - (cfg.moe.first_k_dense if cfg.moe else 0)))
+    return segs
+
+
+def decode_step(params, cfg: TransformerConfig, cache, tokens, length,
+                absorbed: bool = False):
+    """One decode step. tokens (B,) int32; length = current cache fill
+    (scalar int32). Returns (logits (B, V), new_cache)."""
+    B = tokens.shape[0]
+    x = params["embed"][tokens][:, None, :]           # (B, 1, d)
+    positions = jnp.full((B, 1), length, jnp.int32)
+    layer_off = 0
+    new_cache = dict(cache)
+
+    for stack, moe, n in _stack_blocks(params, cfg):
+        def body(carry, inp):
+            xx, lidx = carry
+            blk, cache_sl = inp
+            xn = rms_norm(xx, blk["ln1"], cfg.norm_eps)
+            if cfg.mla is not None:
+                c_kv, k_r = mla_compress(blk["attn"], cfg, xn, positions)
+                ck = jax.lax.dynamic_update_slice(
+                    cache_sl["c_kv"], c_kv.astype(cache_sl["c_kv"].dtype),
+                    (0, length, 0))
+                kr = jax.lax.dynamic_update_slice(
+                    cache_sl["k_rope"], k_r[:, :, 0].astype(
+                        cache_sl["k_rope"].dtype), (0, length, 0))
+                if absorbed:
+                    o = mla_absorbed_decode(blk["attn"], cfg, xn, ck, kr[:, :, None],
+                                            length + 1, positions)
+                else:
+                    k_nope, v = mla_expand_kv(blk["attn"], cfg, ck)
+                    q_nope, q_rope = mla_queries(blk["attn"], cfg, xn, positions)
+                    q = jnp.concatenate([q_nope, q_rope], -1)
+                    k = jnp.concatenate(
+                        [k_nope, jnp.broadcast_to(
+                            kr[:, :, None, :],
+                            k_nope.shape[:-1] + (kr.shape[-1],))], -1)
+                    o = decode_attention(q, k, v, length + 1)
+                    o = o.reshape(B, 1, -1) @ blk["attn"]["wo"]
+                new_sl = dict(c_kv=ck, k_rope=kr)
+            else:
+                q, k, v = gqa_qkv(blk["attn"], cfg, xn, positions)
+                ck = jax.lax.dynamic_update_slice(
+                    cache_sl["k"], k.astype(cache_sl["k"].dtype),
+                    (0, length, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cache_sl["v"], v.astype(cache_sl["v"].dtype),
+                    (0, length, 0, 0))
+                o = decode_attention(q, ck, cv, length + 1)
+                o = o.reshape(B, 1, -1) @ blk["attn"]["wo"]
+                new_sl = dict(k=ck, v=cv)
+            h = xx + o
+            hn = rms_norm(h, blk["ln2"], cfg.norm_eps)
+            if moe:
+                y, _ = moe_block(blk["ffn"], cfg, hn)
+            else:
+                y = swiglu(hn, **blk["ffn"])
+            return (h + y, lidx + 1), new_sl
+
+        cache_seg = {k: jax.lax.dynamic_slice_in_dim(v, layer_off, n, 0)
+                     for k, v in cache.items()}
+        # move layer axis first for scan
+        (x, _), upd = jax.lax.scan(
+            body, (x, 0), (stack, jax.tree.map(lambda v: v, cache_seg)))
+        for k in new_cache:
+            new_cache[k] = jax.lax.dynamic_update_slice_in_dim(
+                new_cache[k], upd[k], layer_off, 0)
+        layer_off += n
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head)[:, 0]
+    return logits, new_cache
+
+
+def prefill(params, cfg: TransformerConfig, tokens, max_len: int | None = None,
+            cache_shardings=None, last_only: bool = False):
+    """Prefill: run the full sequence, return (logits, cache filled to S).
+
+    ``cache_shardings`` (dict matching the cache pytree) constrains both the
+    zero-init and every per-layer update — without it the cache is born
+    replicated and GSPMD all-gathers each layer's K/V into it (measured 74
+    GiB/device temp at 32k prefill, §Perf). ``last_only`` computes logits
+    for the final position only (decode handoff needs nothing else)."""
+    B, S = tokens.shape
+    max_len = max_len or S
+    cache = init_cache(cfg, B, max_len)
+    if cache_shardings is not None:
+        cache = {k: jax.lax.with_sharding_constraint(v, cache_shardings[k])
+                 for k, v in cache.items()}
+    x = params["embed"][tokens]
+    positions = jnp.arange(S)[None, :]
+    layer_off = 0
+
+    for stack, moe, n in _stack_blocks(params, cfg):
+        def body(xx, blk):
+            xn = rms_norm(xx, blk["ln1"], cfg.norm_eps)
+            if cfg.mla is not None:
+                c_kv, k_r = mla_compress(blk["attn"], cfg, xn, positions)
+                k_nope, v = mla_expand_kv(blk["attn"], cfg, c_kv)
+                q_nope, q_rope = mla_queries(blk["attn"], cfg, xn, positions)
+                q = jnp.concatenate([q_nope, q_rope], -1)
+                k = jnp.concatenate(
+                    [k_nope, jnp.broadcast_to(
+                        k_r, k_nope.shape[:-1] + (k_r.shape[-1],))], -1)
+                o = flash_attention(q, k, v, causal=True)
+                o = o.reshape(B, S, -1) @ blk["attn"]["wo"]
+                kv_out = dict(c_kv=c_kv, k_rope=k_r[:, :, 0])
+            else:
+                q, k, v = gqa_qkv(blk["attn"], cfg, xn, positions)
+                o = flash_attention(q, k, v, causal=True)
+                o = o.reshape(B, S, -1) @ blk["attn"]["wo"]
+                kv_out = dict(k=k, v=v)
+            h = xx + o
+            hn = rms_norm(h, blk["ln2"], cfg.norm_eps)
+            y = moe_block(blk["ffn"], cfg, hn)[0] if moe \
+                else swiglu(hn, **blk["ffn"])
+            return h + y, kv_out
+
+        x, kvs = jax.lax.scan(body, x, stack)
+        for k, v in kvs.items():
+            pad = max_len - S
+            vv = jnp.pad(v.astype(cache[k].dtype),
+                         ((0, 0), (0, 0), (0, pad)) + ((0, 0),) * (v.ndim - 3))
+            if cache_shardings is not None:
+                vv = jax.lax.with_sharding_constraint(
+                    vv, cache_shardings[k])
+            cache[k] = jax.lax.dynamic_update_slice_in_dim(
+                cache[k], vv, layer_off, 0)
+            if cache_shardings is not None:
+                cache[k] = jax.lax.with_sharding_constraint(
+                    cache[k], cache_shardings[k])
+        layer_off += n
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if last_only:
+        return x[:, -1:] @ head, cache
+    return x @ head, cache

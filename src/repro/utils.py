@@ -1,0 +1,89 @@
+"""Small shared utilities (no jax imports at module scope beyond jax itself)."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import time
+from typing import Any, Callable, Iterable
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0:
+            return f"{n:,.2f} {unit}"
+        n /= 1024.0
+    return f"{n:,.2f} PiB"
+
+
+def human_count(n: float) -> str:
+    for unit in ("", "K", "M", "B", "T"):
+        if abs(n) < 1000.0:
+            return f"{n:,.2f}{unit}"
+        n /= 1000.0
+    return f"{n:,.2f}Q"
+
+
+class Timer:
+    """Context-manager wall timer."""
+
+    def __init__(self, name: str = ""):
+        self.name = name
+        self.elapsed = 0.0
+
+    def __enter__(self):
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.elapsed = time.perf_counter() - self._t0
+        return False
+
+
+def asdict_shallow(obj: Any) -> dict:
+    if dataclasses.is_dataclass(obj):
+        return {f.name: getattr(obj, f.name) for f in dataclasses.fields(obj)}
+    raise TypeError(obj)
+
+
+def dump_json(path: str, obj: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+
+    def default(o):
+        if dataclasses.is_dataclass(o):
+            return dataclasses.asdict(o)
+        if hasattr(o, "tolist"):
+            return o.tolist()
+        return str(o)
+
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=2, default=default, sort_keys=True)
+
+
+def load_json(path: str) -> Any:
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_table(rows: Iterable[Iterable[Any]], header: list[str] | None = None) -> str:
+    rows = [[str(c) for c in r] for r in rows]
+    if header:
+        rows = [list(header)] + rows
+    if not rows:
+        return ""
+    widths = [max(len(r[i]) for r in rows) for i in range(len(rows[0]))]
+    lines = []
+    for ri, r in enumerate(rows):
+        lines.append("  ".join(c.ljust(w) for c, w in zip(r, widths)))
+        if header and ri == 0:
+            lines.append("  ".join("-" * w for w in widths))
+    return "\n".join(lines)

@@ -1,0 +1,41 @@
+"""Property test on the system invariant: RADS (sim) == brute-force oracle
+for random (graph, pattern) draws. Few examples — each draw compiles the
+engine — but unconstrained in structure."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.rads import EngineConfig
+from repro.core import Pattern, canonicalize, enumerate_oracle, rads_enumerate
+from repro.graph import erdos_graph, partition
+
+CFG = EngineConfig(frontier_cap=1 << 12, fetch_cap=512, verify_cap=2048,
+                   region_group_budget=1 << 11)
+
+
+@st.composite
+def pattern_and_graph(draw):
+    n = draw(st.integers(3, 5))
+    edges = set()
+    for v in range(1, n):
+        edges.add((draw(st.integers(0, v - 1)), v))
+    for _ in range(draw(st.integers(0, 3))):
+        a = draw(st.integers(0, n - 1))
+        b = draw(st.integers(0, n - 1))
+        if a != b:
+            edges.add((min(a, b), max(a, b)))
+    seed = draw(st.integers(0, 10))
+    deg = draw(st.sampled_from([3.0, 5.0]))
+    return Pattern.from_edges(edges), seed, deg
+
+
+@given(pattern_and_graph())
+@settings(max_examples=6, deadline=None)
+def test_property_engine_equals_oracle(pg_draw):
+    pattern, seed, deg = pg_draw
+    g = erdos_graph(90, deg, seed=seed)
+    pg = partition(g, 3, method="bfs")
+    oracle = canonicalize(enumerate_oracle(g, pattern), pattern)
+    res = rads_enumerate(pg, pattern, CFG, mode="sim")
+    assert res.count == len(oracle)
+    assert canonicalize(res.embeddings, pattern) == oracle

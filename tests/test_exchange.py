@@ -1,0 +1,70 @@
+"""Static-shape primitives + the sim-mode exchange semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.exchange import (Exchange, compact, membership, unique_ids,
+                                 unique_pairs)
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=40),
+       st.integers(1, 12))
+@settings(max_examples=50, deadline=None)
+def test_property_compact(mask_list, cap):
+    mask = jnp.array(mask_list)
+    arr = jnp.arange(len(mask_list)) * 7
+    nm, ov, out = compact(mask, cap, arr, fill=-1)
+    want = [int(a) for a, m in zip(arr, mask_list) if m][:cap]
+    got = [int(x) for x, m in zip(out, nm) if m]
+    assert got == want
+    assert bool(ov) == (sum(mask_list) > cap)
+
+
+@given(st.lists(st.integers(0, 50), min_size=1, max_size=40))
+@settings(max_examples=50, deadline=None)
+def test_property_unique_ids(ids_list):
+    ids = jnp.array(ids_list)
+    mask = ids < 40
+    uids, umask = unique_ids(ids, mask, sentinel=99)
+    want = sorted({i for i in ids_list if i < 40})
+    got = [int(x) for x, m in zip(uids, umask) if m]
+    assert got == want
+
+
+@given(st.lists(st.tuples(st.integers(0, 8), st.integers(0, 8),
+                          st.booleans()), min_size=1, max_size=30))
+@settings(max_examples=50, deadline=None)
+def test_property_unique_pairs(items):
+    a = jnp.array([x[0] for x in items])
+    b = jnp.array([x[1] for x in items])
+    m = jnp.array([x[2] for x in items])
+    ua, ub, um, rank = unique_pairs(a, b, m, sentinel=9)
+    want = sorted({(int(x), int(y)) for x, y, keep in items if keep})
+    got = [(int(x), int(y)) for x, y, mm in zip(ua, ub, um) if mm]
+    assert got == want
+    # every masked input pair's rank points at its own pair
+    for i, (x, y, keep) in enumerate(items):
+        if keep:
+            r = int(rank[i])
+            assert (int(ua[r]), int(ub[r])) == (x, y)
+
+
+def test_membership_matches_searchsorted():
+    rng = np.random.default_rng(0)
+    rows = np.sort(rng.integers(0, 100, (23, 17)), axis=1)
+    vals = rng.integers(0, 100, (23, 5))
+    got = membership(jnp.asarray(rows), jnp.asarray(vals))
+    want = np.array([[v in set(r) for v in vv] for r, vv in zip(rows, vals)])
+    assert np.array_equal(np.asarray(got), want)
+
+
+def test_sim_a2a_is_transpose_involution():
+    ex = Exchange("sim")
+    x = jnp.arange(3 * 3 * 4).reshape(3, 3, 4)
+    y = ex.a2a(x)
+    assert jnp.array_equal(ex.a2a(y), x)
+    # out[t, s] == x[s, t]
+    for t in range(3):
+        for s in range(3):
+            assert jnp.array_equal(y[t, s], x[s, t])

@@ -1,0 +1,115 @@
+"""Multi-device correctness via subprocess (8 forced host devices):
+* SPMD engine (real all_to_all under shard_map) == sim engine == oracle
+* sharded train step == single-device train step
+* compressed_psum == plain psum within quantization error
+Each test spawns one python subprocess so the main pytest process keeps the
+single real device (see conftest note).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_sub(code: str) -> dict:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_spmd_engine_matches_oracle():
+    res = run_sub(textwrap.dedent("""
+        import json, jax, numpy as np
+        from repro.graph import erdos_graph, partition
+        from repro.core import Pattern, rads_enumerate, enumerate_oracle, canonicalize
+        from repro.configs.rads import QUERIES, EngineConfig
+        from repro.launch.mesh import make_engine_mesh
+        mesh = make_engine_mesh(8)
+        cfg = EngineConfig(frontier_cap=1<<12, fetch_cap=256, verify_cap=1024,
+                           region_group_budget=1<<11)
+        g = erdos_graph(120, 5.0, seed=5)
+        pg = partition(g, 8, method='bfs')
+        ok = True
+        for q in ['q1', 'q2', 'q6']:
+            pat = Pattern.from_edges(QUERIES[q])
+            oracle = canonicalize(enumerate_oracle(g, pat), pat)
+            spmd = rads_enumerate(pg, pat, cfg, mode='spmd', mesh=mesh)
+            sim = rads_enumerate(pg, pat, cfg, mode='sim')
+            ok &= canonicalize(spmd.embeddings, pat) == oracle
+            ok &= canonicalize(sim.embeddings, pat) == oracle
+        print(json.dumps(dict(ok=bool(ok))))
+    """))
+    assert res["ok"]
+
+
+@pytest.mark.slow
+def test_sharded_train_matches_single_device():
+    res = run_sub(textwrap.dedent("""
+        import json, jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_reduced
+        from repro.models.transformer import init_lm_params, lm_loss
+        from repro.distributed.sharding import param_shardings
+        from repro.launch.mesh import make_mesh
+        cfg = get_reduced('qwen3-4b')
+        params = init_lm_params(jax.random.PRNGKey(0), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, cfg.vocab)
+        lbls = jnp.roll(toks, -1, axis=1)
+        loss_plain = float(lm_loss(params, cfg, toks, lbls))
+        mesh = make_mesh((4, 2), ('data', 'model'))
+        with mesh:
+            psh = param_shardings(params, 'lm', mesh)
+            pp = jax.tree.map(jax.device_put, params, psh)
+            tsh = NamedSharding(mesh, P('data', None))
+            lg = NamedSharding(mesh, P('data', None, 'model'))
+            hd = NamedSharding(mesh, P('data', None, None))
+            loss_sh = float(jax.jit(
+                lambda p, t, l: lm_loss(p, cfg, t, l, logits_sharding=lg,
+                                        hidden_sharding=hd))(
+                pp, jax.device_put(toks, tsh), jax.device_put(lbls, tsh)))
+        rel = abs(loss_plain - loss_sh) / max(abs(loss_plain), 1e-9)
+        print(json.dumps(dict(rel=rel)))
+    """))
+    assert res["rel"] < 2e-2   # bf16 reduction-order tolerance
+
+
+@pytest.mark.slow
+def test_compressed_psum_close_to_exact():
+    res = run_sub(textwrap.dedent("""
+        import json, jax, jax.numpy as jnp, numpy as np
+        from repro.distributed.compression import compressed_psum
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8,), ('pod',))
+        x = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        xs = jax.device_put(x, NamedSharding(mesh, P('pod', None)))
+        # exact: every row becomes the column-sum
+        want = np.broadcast_to(np.asarray(x).sum(0, keepdims=True), x.shape)
+        got = np.asarray(compressed_psum(xs, 'pod', mesh))
+        err = np.abs(got - want).max() / np.abs(want).max()
+        print(json.dumps(dict(err=float(err))))
+    """))
+    assert res["err"] < 0.05
+
+
+@pytest.mark.slow
+def test_dryrun_entrypoint_smallest_cell():
+    """The actual dryrun module runs end to end (512 devices) for one cell."""
+    env = dict(os.environ, PYTHONPATH=SRC,
+               DRYRUN_ARTIFACTS="/tmp/dryrun_test_artifacts")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "gat-cora",
+         "--shape", "molecule", "--mesh", "single"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "all dry-runs passed" in out.stdout

@@ -1,0 +1,115 @@
+"""Execution-plan computation (§4): invariants + property tests."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.rads import CLIQUE_QUERIES, QUERIES
+from repro.core import (Pattern, best_plan, bfs_fallback_plan, minimum_cds,
+                        min_rounds_unscored_plan, random_star_plan)
+from repro.core.plan import compute_matching_order
+
+ALL_QUERIES = {**QUERIES, **CLIQUE_QUERIES}
+
+
+@pytest.mark.parametrize("qname", list(ALL_QUERIES))
+def test_best_plan_valid_and_minimum_rounds(qname):
+    p = Pattern.from_edges(ALL_QUERIES[qname])
+    plan = best_plan(p)
+    plan.validate()
+    c_p = len(minimum_cds(p)[0])
+    assert plan.n_rounds == c_p, "Theorem 1: rounds == connected-domination #"
+    assert plan.matching_order[0] == plan.units[0].piv
+
+
+@pytest.mark.parametrize("qname", list(QUERIES))
+def test_matching_order_is_total_order(qname):
+    p = Pattern.from_edges(QUERIES[qname])
+    plan = best_plan(p)
+    order = compute_matching_order(plan)
+    assert sorted(order) == list(range(p.n))
+    # Def. 10 (1): pivots appear in unit order
+    pos = {u: i for i, u in enumerate(order)}
+    pivs = [u.piv for u in plan.units]
+    assert all(pos[a] < pos[b] for a, b in zip(pivs, pivs[1:]))
+
+
+def test_span_and_border_distance_examples():
+    # Figure 4-style: span differs by choice of pivot
+    p = Pattern.from_edges(QUERIES["q5"])
+    spans = [p.span(u) for u in range(p.n)]
+    assert min(spans) >= 1 and max(spans) <= p.n - 1
+
+
+def test_pivots_form_connected_dominating_set():
+    for qname, edges in ALL_QUERIES.items():
+        p = Pattern.from_edges(edges)
+        plan = best_plan(p)
+        pivs = tuple(sorted({u.piv for u in plan.units}))
+        from repro.core.plan import _is_dominating, _is_connected_subset
+        assert _is_dominating(p, pivs)
+        assert _is_connected_subset(p, pivs)
+
+
+def test_baseline_plans_valid():
+    for qname, edges in ALL_QUERIES.items():
+        p = Pattern.from_edges(edges)
+        random_star_plan(p, seed=3).validate()
+        min_rounds_unscored_plan(p).validate()
+        bfs_fallback_plan(p).validate()
+
+
+def test_score_prefers_early_verification_edges():
+    # paper Example 5: PL1 (2,1,2 verification edges) beats PL2 (1,2,2)
+    from repro.core.plan import Plan, Unit
+    edges = [(0, 1), (0, 2), (1, 2), (1, 3), (1, 4), (3, 4), (4, 5), (2, 5),
+             (2, 6), (0, 7), (0, 8), (0, 9), (8, 9)]
+    p = Pattern.from_edges(edges)
+    pl1 = Plan(pattern=p, units=(Unit(0, (1, 2, 7, 8, 9)), Unit(1, (3, 4)),
+                                 Unit(2, (5, 6))))
+    pl2 = Plan(pattern=p, units=(Unit(1, (0, 3, 4)), Unit(0, (2, 7, 8, 9)),
+                                 Unit(2, (5, 6))))
+    pl1.validate()
+    pl2.validate()
+    assert pl1.score(rho=1.0) > pl2.score(rho=1.0)
+
+
+# ---------------------------------------------------------------------- #
+# property: random connected patterns
+# ---------------------------------------------------------------------- #
+@st.composite
+def connected_pattern(draw):
+    n = draw(st.integers(3, 6))
+    # random spanning tree + extra edges
+    edges = set()
+    for v in range(1, n):
+        u = draw(st.integers(0, v - 1))
+        edges.add((u, v))
+    extra = draw(st.lists(
+        st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+        max_size=5))
+    for a, b in extra:
+        if a != b:
+            edges.add((min(a, b), max(a, b)))
+    return Pattern.from_edges(edges)
+
+
+@given(connected_pattern())
+@settings(max_examples=30, deadline=None)
+def test_property_best_plan_always_valid(p):
+    plan = best_plan(p)
+    plan.validate()
+    assert plan.n_rounds == len(minimum_cds(p)[0])
+    order = plan.matching_order
+    assert sorted(order) == list(range(p.n))
+
+
+@given(connected_pattern())
+@settings(max_examples=20, deadline=None)
+def test_property_symmetry_constraints_acyclic(p):
+    cons = p.symmetry_constraints()
+    # constraints must form a DAG (no contradiction f(a)<f(b)<f(a))
+    import networkx as nx
+    g = nx.DiGraph(cons)
+    assert nx.is_directed_acyclic_graph(g)

@@ -1,0 +1,125 @@
+"""End-to-end behaviour of the paper's system: RADS == oracle on real
+graph/query mixes, robustness knobs, and the engine==baselines agreement."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.rads import EngineConfig, QUERIES
+from repro.core import Pattern, canonicalize, enumerate_oracle, rads_enumerate
+from repro.core.baselines import crystal_lite, join_enumerate, psgl_enumerate
+from repro.graph import erdos_graph, partition, road_graph
+
+CFG = EngineConfig(frontier_cap=1 << 13, fetch_cap=512, verify_cap=2048,
+                   region_group_budget=1 << 12)
+
+
+@pytest.fixture(scope="module")
+def erdos():
+    g = erdos_graph(150, 5.0, seed=3)
+    return g, partition(g, 4, method="bfs")
+
+
+@pytest.fixture(scope="module")
+def road():
+    g = road_graph(400, seed=1)
+    return g, partition(g, 4, method="block")
+
+
+@pytest.mark.parametrize("qname", ["q1", "q2", "q3", "q5", "q8"])
+def test_rads_matches_oracle_erdos(erdos, qname):
+    g, pg = erdos
+    pat = Pattern.from_edges(QUERIES[qname])
+    oracle = canonicalize(enumerate_oracle(g, pat), pat)
+    res = rads_enumerate(pg, pat, CFG, mode="sim")
+    assert res.count == len(oracle)
+    assert canonicalize(res.embeddings, pat) == oracle
+
+
+@pytest.mark.parametrize("qname", ["q1", "q6"])
+def test_rads_matches_oracle_road(road, qname):
+    g, pg = road
+    pat = Pattern.from_edges(QUERIES[qname])
+    oracle = canonicalize(enumerate_oracle(g, pat), pat)
+    res = rads_enumerate(pg, pat, CFG, mode="sim")
+    assert canonicalize(res.embeddings, pat) == oracle
+    # road graphs: block partition => most seeds are SM-E (Prop. 1 pays off)
+    st = res.stats
+    assert st["n_sme_seeds"] > 0
+
+
+def test_sme_off_same_results(erdos):
+    g, pg = erdos
+    pat = Pattern.from_edges(QUERIES["q2"])
+    a = rads_enumerate(pg, pat, CFG, mode="sim")
+    b = rads_enumerate(pg, pat, dataclasses.replace(CFG, enable_sme=False),
+                       mode="sim")
+    assert canonicalize(a.embeddings, pat) == canonicalize(b.embeddings, pat)
+    assert b.stats["n_sme_seeds"] == 0
+
+
+def test_work_stealing_off_same_results(erdos):
+    g, pg = erdos
+    pat = Pattern.from_edges(QUERIES["q1"])
+    a = rads_enumerate(pg, pat, CFG, mode="sim")
+    b = rads_enumerate(pg, pat,
+                       dataclasses.replace(CFG, enable_work_stealing=False),
+                       mode="sim")
+    assert canonicalize(a.embeddings, pat) == canonicalize(b.embeddings, pat)
+
+
+def test_tiny_caps_trigger_robustness_loop(erdos):
+    """Memory-control path: with absurdly small caps the driver must split
+    region groups / escalate capacities and still return exact results."""
+    g, pg = erdos
+    pat = Pattern.from_edges(QUERIES["q1"])
+    tiny = EngineConfig(frontier_cap=256, fetch_cap=64, verify_cap=128,
+                        region_group_budget=64)
+    oracle = canonicalize(enumerate_oracle(g, pat), pat)
+    res = rads_enumerate(pg, pat, tiny, mode="sim")
+    assert canonicalize(res.embeddings, pat) == oracle
+    assert res.stats["overflow_retries"] + res.stats["cap_escalations"] >= 0
+
+
+def test_partition_methods_agree(erdos):
+    g, _ = erdos
+    pat = Pattern.from_edges(QUERIES["q3"])
+    oracle = canonicalize(enumerate_oracle(g, pat), pat)
+    for method in ("bfs", "block", "hash"):
+        pg = partition(g, 4, method=method)
+        res = rads_enumerate(pg, pat, CFG, mode="sim")
+        assert canonicalize(res.embeddings, pat) == oracle, method
+
+
+def test_ndev_sweep(erdos):
+    g, _ = erdos
+    pat = Pattern.from_edges(QUERIES["q1"])
+    oracle = canonicalize(enumerate_oracle(g, pat), pat)
+    for ndev in (1, 2, 8):
+        pg = partition(g, ndev, method="bfs")
+        res = rads_enumerate(pg, pat, CFG, mode="sim")
+        assert canonicalize(res.embeddings, pat) == oracle, ndev
+
+
+@pytest.mark.parametrize("qname", ["q1", "q5"])
+def test_baselines_match_oracle(erdos, qname):
+    g, pg = erdos
+    pat = Pattern.from_edges(QUERIES[qname])
+    oracle = canonicalize(enumerate_oracle(g, pat), pat)
+    assert canonicalize(psgl_enumerate(pg, pat).embeddings, pat) == oracle
+    assert canonicalize(join_enumerate(pg, pat, "twintwig").embeddings,
+                        pat) == oracle
+    assert canonicalize(join_enumerate(pg, pat, "seed").embeddings,
+                        pat) == oracle
+    assert canonicalize(crystal_lite(pg, pat, g).embeddings, pat) == oracle
+
+
+def test_rads_ships_less_than_join_baselines(erdos):
+    """The paper's headline claim (Figures 8-11): RADS communication volume
+    is far below the shuffle volume of join-based systems."""
+    g, pg = erdos
+    pat = Pattern.from_edges(QUERIES["q5"])
+    r = rads_enumerate(pg, pat, CFG, mode="sim")
+    tt = join_enumerate(pg, pat, "twintwig")
+    rads_bytes = r.stats["bytes_fetch"] + r.stats["bytes_verify"]
+    assert rads_bytes < tt.bytes_shuffled
