@@ -1,0 +1,25 @@
+# Verification entry points. `make verify` is the fast hermetic tier;
+# `make verify-slow` is the multi-device / subprocess tier. CI runs both
+# (see .github/workflows/ci.yml) plus the collection gate, so a test module
+# that stops importing (e.g. a missing optional dependency) fails loudly
+# instead of silently shrinking the suite.
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: verify verify-slow verify-all collect-check
+
+## tier-1: every module must collect; fast tests must pass
+verify: collect-check
+	$(PY) -m pytest -x -q -m "not slow"
+
+## multi-device / subprocess jobs (8 and 512 forced host devices)
+verify-slow:
+	$(PY) -m pytest -x -q -m slow
+
+## the full suite, exactly what the roadmap's tier-1 command runs
+verify-all:
+	$(PY) -m pytest -x -q
+
+## collection regression gate: all 10 test modules must import cleanly
+collect-check:
+	$(PY) -m pytest -q --collect-only >/dev/null

@@ -1,0 +1,148 @@
+"""Single source for version-drifting JAX APIs.
+
+JAX moves fast and this repo has to run on whatever the container ships:
+
+* ``shard_map`` lived in ``jax.experimental.shard_map`` before being
+  promoted to ``jax.shard_map``;
+* ``jax.make_mesh`` predates its ``axis_types`` kwarg, and
+  ``jax.sharding.AxisType`` does not exist at all on 0.4.x;
+* ``Compiled.cost_analysis()`` returned a one-element *list* of dicts on
+  0.4.x and a plain dict later;
+* the ``jax.tree`` namespace (``jax.tree.map`` & co) replaced the older
+  ``jax.tree_util`` spellings.
+
+Every call-site in this repo imports the resolved symbol from here, so a
+JAX upgrade touches exactly this file.  Probes run once at import time and
+degrade gracefully (stub or fallback) rather than raising.
+
+Supported range: jax>=0.4.30,<0.6 (see pyproject.toml).
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+from jax.sharding import Mesh, PartitionSpec
+
+__all__ = [
+    "AxisType", "HAS_AXIS_TYPES", "default_axis_types", "make_mesh",
+    "shard_map", "tree_map", "tree_leaves", "tree_reduce",
+    "tree_map_with_path", "with_sharding_constraint", "cost_analysis",
+    "memory_analysis",
+]
+
+
+# --------------------------------------------------------------------------- #
+# shard_map: jax.shard_map (>=0.5) vs jax.experimental.shard_map (0.4.x)
+# --------------------------------------------------------------------------- #
+if hasattr(jax, "shard_map"):                                # pragma: no cover
+    _shard_map_impl = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+
+def shard_map(f, *, mesh: Mesh, in_specs, out_specs):
+    """Version-stable ``shard_map``: keyword-only, the common-subset
+    signature both implementations accept."""
+    return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs)
+
+
+# --------------------------------------------------------------------------- #
+# Mesh construction: AxisType landed well after jax.make_mesh
+# --------------------------------------------------------------------------- #
+try:
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+    HAS_AXIS_TYPES = True
+except ImportError:
+    class AxisType:  # minimal stand-in so callers can always name the enum
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+    HAS_AXIS_TYPES = False
+
+
+def default_axis_types(n_axes: int) -> tuple:
+    """``(AxisType.Auto,) * n_axes`` — or the stub equivalent pre-AxisType."""
+    return (AxisType.Auto,) * n_axes
+
+
+_MAKE_MESH_KWARGS = (set(inspect.signature(jax.make_mesh).parameters)
+                     if hasattr(jax, "make_mesh") else set())
+
+
+def make_mesh(axis_shapes: tuple[int, ...], axis_names: tuple[str, ...],
+              *, axis_types: tuple | None = None, devices=None) -> Mesh:
+    """``jax.make_mesh`` across versions.
+
+    ``axis_types`` is forwarded only where the installed JAX understands it
+    (it is a compiler hint, not a semantics change — dropping it is safe on
+    versions where every axis is implicitly Auto).  Pre-``jax.make_mesh``
+    versions fall back to ``mesh_utils.create_device_mesh`` + ``Mesh``.
+    """
+    if hasattr(jax, "make_mesh"):
+        kw = {}
+        if devices is not None:
+            kw["devices"] = devices
+        if axis_types is not None and HAS_AXIS_TYPES \
+                and "axis_types" in _MAKE_MESH_KWARGS:
+            kw["axis_types"] = axis_types
+        return jax.make_mesh(axis_shapes, axis_names, **kw)
+    from jax.experimental import mesh_utils                  # pragma: no cover
+    devs = mesh_utils.create_device_mesh(axis_shapes, devices=devices)
+    return Mesh(devs, axis_names)
+
+
+# --------------------------------------------------------------------------- #
+# Tree utilities: jax.tree namespace vs jax.tree_util
+# --------------------------------------------------------------------------- #
+if hasattr(jax, "tree") and hasattr(jax.tree, "map"):
+    tree_map = jax.tree.map
+    tree_leaves = jax.tree.leaves
+    tree_reduce = jax.tree.reduce
+else:                                                        # pragma: no cover
+    tree_map = jax.tree_util.tree_map
+    tree_leaves = jax.tree_util.tree_leaves
+    tree_reduce = jax.tree_util.tree_reduce
+
+tree_map_with_path = jax.tree_util.tree_map_with_path
+
+
+# --------------------------------------------------------------------------- #
+# Sharding constraint that degrades to identity outside a mesh context
+# --------------------------------------------------------------------------- #
+def with_sharding_constraint(x, *spec):
+    """``lax.with_sharding_constraint`` or identity when no mesh is active
+    (single-device tests) — the historical behaviour also differs across
+    versions in *which* exception is raised, hence the broad except."""
+    try:
+        return jax.lax.with_sharding_constraint(x, PartitionSpec(*spec))
+    except Exception:
+        return x
+
+
+# --------------------------------------------------------------------------- #
+# Compiled-artifact introspection (dryrun / benchmarks)
+# --------------------------------------------------------------------------- #
+def cost_analysis(compiled) -> dict | None:
+    """Normalized ``Compiled.cost_analysis()``: always a dict (or None).
+
+    0.4.x returns ``[{...}]`` — one dict per partition — while newer JAX
+    returns the dict directly; callers doing ``key in cost`` silently read
+    nothing on the list form.
+    """
+    try:
+        cost = compiled.cost_analysis()
+    except Exception:
+        return None
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
+    return cost if isinstance(cost, dict) else None
+
+
+def memory_analysis(compiled):
+    """``Compiled.memory_analysis()`` or None where unsupported."""
+    try:
+        return compiled.memory_analysis()
+    except Exception:
+        return None

@@ -11,7 +11,9 @@ from repro.core.driver import rads_enumerate, EnumerationResult
 from repro.core.oracle import enumerate_oracle, count_oracle, canonicalize
 from repro.core.trie import EmbeddingTrie, compression_report
 from repro.core.region import make_region_groups, proximity_groups
-from repro.core.exchange import Exchange
+from repro.core.exchange import (Exchange, ExchangeBackend,
+                                 exchange_backends,
+                                 register_exchange_backend)
 
 __all__ = [
     "Pattern", "Plan", "Unit", "best_plan", "enumerate_plans", "minimum_cds",
@@ -20,4 +22,5 @@ __all__ = [
     "graph_device_arrays", "GraphMeta", "rads_enumerate", "EnumerationResult",
     "enumerate_oracle", "count_oracle", "canonicalize", "EmbeddingTrie",
     "compression_report", "make_region_groups", "proximity_groups", "Exchange",
+    "ExchangeBackend", "exchange_backends", "register_exchange_backend",
 ]

@@ -23,7 +23,7 @@ import numpy as np
 from repro.configs.rads import DEFAULT_ENGINE, EngineConfig
 from repro.core.engine import (PlanData, build_plan_data,
                                graph_device_arrays, run_rounds)
-from repro.core.exchange import Exchange
+from repro.core.exchange import Exchange, ExchangeBackend
 from repro.core.plan import Plan, best_plan
 from repro.core.query import Pattern
 from repro.core.region import make_region_groups
@@ -68,7 +68,7 @@ class _Runner:
     """Holds the jitted step functions; re-jits on capacity escalation."""
 
     def __init__(self, adj, deg, meta, pd: PlanData, cfg: EngineConfig,
-                 exch: Exchange):
+                 exch: ExchangeBackend):
         self.adj, self.deg, self.meta = adj, deg, meta
         self.pd, self.exch = pd, exch
         self.cfg = cfg
@@ -102,6 +102,9 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
                    mode: str = "sim", mesh=None,
                    plan: Plan | None = None,
                    return_embeddings: bool = True) -> EnumerationResult:
+    """``mode`` selects a registered exchange backend: 'sim' (reference),
+    'gather' (device-local, meshless), 'spmd' (sharded production path —
+    requires ``mesh``)."""
     plan = plan or best_plan(pattern, cfg.plan_rho)
     pd = build_plan_data(plan)
     adj, deg, meta = graph_device_arrays(pg)

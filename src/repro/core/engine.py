@@ -8,7 +8,8 @@ One vectorized, static-shape engine serves four roles:
   ``fetchV`` (batched foreign-adjacency fetch with dedup) then per-leaf
   expansion with local verification, then one batched ``verifyE`` exchange
   over the EVI (deduped undetermined edges; Def. 5, Prop. 2).
-* the **reference** mode (``Exchange('sim')``) on one device, and
+* the **reference** modes (``Exchange('sim')`` / ``Exchange('gather')``) on
+  one device, and
 * the **production** mode (``Exchange('spmd', mesh)``) where the leading
   ``ndev`` axis is sharded over the mesh and exchanges are ``all_to_all``.
 
@@ -25,8 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.rads import EngineConfig
-from repro.core.exchange import (Exchange, compact, membership, unique_ids,
-                                 unique_pairs)
+from repro.core.exchange import (ExchangeBackend, compact, membership,
+                                 unique_ids, unique_pairs)
 from repro.core.plan import Plan
 from repro.graph.storage import PartitionedGraph
 
@@ -125,7 +126,7 @@ def _per_peer_compact(ids, mask, owners, ndev: int, cap_out: int, fill: int):
     return reqs, counts, jnp.any(ovs)
 
 
-def fetch_exchange(adj, meta: GraphMeta, exch: Exchange,
+def fetch_exchange(adj, meta: GraphMeta, exch: ExchangeBackend,
                    pivots, need, fcap: int):
     """Batched fetchV (§3.2 Expand): dedup foreign pivot ids, exchange,
     answer with local adjacency rows, exchange back.
@@ -151,12 +152,12 @@ def fetch_exchange(adj, meta: GraphMeta, exch: Exchange,
 
     resp = jax.vmap(answer)(t_ids, recv)               # (ndev, src, fcap, D)
     fetched = exch.a2a(resp)                           # (ndev, peer, fcap, D)
-    off = counts * (1 - jnp.eye(ndev, dtype=counts.dtype))
-    off_bytes = off.sum().astype(jnp.float32) * 4 * (1 + meta.max_degree)
+    # 4B request id + 4B * max_degree response row per off-device entry
+    off_bytes = exch.off_device_bytes(counts, 4 * (1 + meta.max_degree))
     return reqs, fetched, jnp.any(ov), off_bytes
 
 
-def verify_exchange(adj, meta: GraphMeta, exch: Exchange,
+def verify_exchange(adj, meta: GraphMeta, exch: ExchangeBackend,
                     pa, pb, pmask, vcap: int):
     """Batched verifyE over the EVI (§3.2). pa/pb/pmask: (ndev, R, K).
     Pairs routed to owner(pa). Returns (ok (ndev, R, K) — True where the
@@ -199,8 +200,8 @@ def verify_exchange(adj, meta: GraphMeta, exch: Exchange,
 
     ok_flat = jax.vmap(collect)(back, owners, slots, umask, rank)
     ok = ok_flat.reshape(ndev, R, K) | ~pmask
-    off = counts * (1 - jnp.eye(ndev, dtype=counts.dtype))
-    off_bytes = off.sum().astype(jnp.float32) * (8 + 1)
+    # 8B pair request + 1B bool response per off-device entry
+    off_bytes = exch.off_device_bytes(counts, 8 + 1)
     return ok, jnp.any(ov), off_bytes
 
 
@@ -301,7 +302,7 @@ def _leaf_step(adj, deg, meta: GraphMeta, cfg: EngineConfig, spec: StepSpec,
 # Full multi-round run
 # --------------------------------------------------------------------------- #
 def run_rounds(adj, deg, meta: GraphMeta, pd: PlanData, cfg: EngineConfig,
-               exch: Exchange, seeds, seed_mask, local_only: bool):
+               exch: ExchangeBackend, seeds, seed_mask, local_only: bool):
     """Traceable core: all units, all leaves, exchanges per round.
 
     seeds: (ndev, scap) global vertex ids.  Returns (rows, alive, counts,

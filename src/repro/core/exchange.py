@@ -1,58 +1,167 @@
-"""Collective-exchange abstraction for the R-Meef engine.
+"""Collective-exchange backends for the R-Meef engine.
 
-Engine state is *stacked*: every array carries a leading ``ndev`` axis.  In
-``sim`` mode the whole stack lives on one device and the all-to-all is an
-axis swap — bit-identical reference semantics for tests.  In ``spmd`` mode
-the leading axis is sharded over the mesh's ``data`` axis and the exchange
-is a real ``jax.lax.all_to_all`` under ``shard_map`` — the production path
-(this is the paper's fetchV/verifyE request/response, batched per round).
+Engine state is *stacked*: every array carries a leading ``ndev`` axis.  A
+backend supplies the two collectives the engine needs — ``a2a`` (the
+paper's batched fetchV/verifyE request/response routing, ``out[t, s] =
+x[s, t]``) and ``all_reduce_sum`` — plus the off-device byte accounting
+that keeps ``stats["bytes_fetch"]``/``stats["bytes_verify"]`` comparable
+across backends.
+
+Built-in backends, selected with ``Exchange(mode)``:
+
+* ``sim``    — whole stack on one device, a2a is an axis swap.  Bit-exact
+               reference semantics for tests.
+* ``spmd``   — leading axis sharded over the mesh's ``data`` axis, a2a is a
+               real ``jax.lax.all_to_all`` under ``shard_map`` (resolved
+               through :mod:`repro.compat`) — the production path.
+* ``gather`` — the same request/response protocol as ``sim`` implemented
+               with plain device-local gathers; runs on CPU-only
+               single-process hosts with no mesh at all.
+
+New backends register with ``@register_exchange_backend("name")``.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
+from typing import ClassVar
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import compat
 
 
+# --------------------------------------------------------------------------- #
+# Backend registry
+# --------------------------------------------------------------------------- #
 @dataclass(frozen=True)
-class Exchange:
-    """mode: 'sim' (axis swap) or 'spmd' (shard_map + lax.all_to_all)."""
+class ExchangeBackend:
+    """Base class: collectives over the stacked ``(ndev, ...)`` layout."""
 
-    mode: str = "sim"
+    mode: ClassVar[str] = "abstract"
+
     mesh: Mesh | None = None
     axis: str = "data"
 
     def a2a(self, x: jnp.ndarray) -> jnp.ndarray:
         """x: (ndev_src, ndev_dst, ...) -> out[t, s] = x[s, t]."""
-        if self.mode == "sim":
-            return jnp.swapaxes(x, 0, 1)
-        assert self.mesh is not None, "spmd exchange needs a mesh"
-        ndev = x.shape[0]
+        raise NotImplementedError
 
+    def all_reduce_sum(self, x: jnp.ndarray) -> jnp.ndarray:
+        """x: (ndev, ...) -> summed-over-devices, broadcast back."""
+        raise NotImplementedError
+
+    def off_device_bytes(self, counts: jnp.ndarray,
+                         elem_bytes: float) -> jnp.ndarray:
+        """Wire bytes implied by a per-peer request count matrix.
+
+        ``counts[t, p]`` = entries device ``t`` sends to peer ``p``; the
+        diagonal (self-traffic) is free on every backend.  All built-in
+        backends share this *logical* accounting — sim and gather report
+        the bytes the spmd path would put on the wire, so stats stay
+        comparable when swapping backends.
+        """
+        ndev = counts.shape[0]
+        off = counts * (1 - jnp.eye(ndev, dtype=counts.dtype))
+        return off.sum().astype(jnp.float32) * elem_bytes
+
+
+_BACKENDS: dict[str, type[ExchangeBackend]] = {}
+
+
+def register_exchange_backend(name: str):
+    """Class decorator: make ``Exchange(name)`` resolve to this backend."""
+    def deco(cls: type[ExchangeBackend]) -> type[ExchangeBackend]:
+        cls.mode = name
+        _BACKENDS[name] = cls
+        return cls
+    return deco
+
+
+def exchange_backends() -> tuple[str, ...]:
+    """Registered backend names (sorted)."""
+    return tuple(sorted(_BACKENDS))
+
+
+def Exchange(mode: str = "sim", mesh: Mesh | None = None,
+             axis: str = "data") -> ExchangeBackend:
+    """Factory kept name-compatible with the old two-branch dataclass:
+    ``Exchange("sim")`` / ``Exchange(mode="spmd", mesh=mesh)``."""
+    try:
+        cls = _BACKENDS[mode]
+    except KeyError:
+        raise ValueError(
+            f"unknown exchange mode {mode!r}; registered backends: "
+            f"{list(exchange_backends())}") from None
+    return cls(mesh=mesh, axis=axis)
+
+
+# --------------------------------------------------------------------------- #
+# Built-in backends
+# --------------------------------------------------------------------------- #
+@register_exchange_backend("sim")
+@dataclass(frozen=True)
+class SimExchange(ExchangeBackend):
+    """Single-device reference: the all-to-all is an axis swap."""
+
+    def a2a(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jnp.swapaxes(x, 0, 1)
+
+    def all_reduce_sum(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jnp.broadcast_to(x.sum(axis=0, keepdims=True), x.shape)
+
+
+@register_exchange_backend("gather")
+@dataclass(frozen=True)
+class GatherExchange(ExchangeBackend):
+    """Device-local gathers, no mesh, no collectives.
+
+    Semantically identical to ``sim`` (both realize the exact transpose
+    protocol) but lowers to per-destination gathers — the shape a real
+    RDMA/queue-pair transport would take on a CPU-only single-process
+    host, and a third registry entry proving backends are pluggable."""
+
+    def a2a(self, x: jnp.ndarray) -> jnp.ndarray:
+        ndev = x.shape[0]
+        # destination t gathers its column from every source's row
+        return jax.vmap(lambda t: jnp.take(x, t, axis=1))(jnp.arange(ndev))
+
+    def all_reduce_sum(self, x: jnp.ndarray) -> jnp.ndarray:
+        total = x.sum(axis=0)
+        return jax.vmap(lambda _: total)(jnp.arange(x.shape[0]))
+
+
+@register_exchange_backend("spmd")
+@dataclass(frozen=True)
+class SpmdExchange(ExchangeBackend):
+    """Production path: leading axis sharded over ``mesh[axis]``; exchanges
+    are real collectives under ``shard_map``."""
+
+    def __post_init__(self):
+        if self.mesh is None:
+            raise ValueError("spmd exchange needs a mesh")
+
+    def _spec(self, ndim: int) -> P:
+        return P(self.axis, *([None] * (ndim - 1)))
+
+    def a2a(self, x: jnp.ndarray) -> jnp.ndarray:
         def body(xl):  # (1, ndev, ...)
             out = jax.lax.all_to_all(xl[0], self.axis, split_axis=0,
                                      concat_axis=0, tiled=True)
             return out[None]
 
-        spec = P(self.axis, *([None] * (x.ndim - 1)))
-        return jax.shard_map(body, mesh=self.mesh, in_specs=spec,
-                             out_specs=spec)(x)
+        spec = self._spec(x.ndim)
+        return compat.shard_map(body, mesh=self.mesh, in_specs=spec,
+                                out_specs=spec)(x)
 
     def all_reduce_sum(self, x: jnp.ndarray) -> jnp.ndarray:
-        """x: (ndev, ...) -> scalar-summed-over-devices broadcast back."""
-        if self.mode == "sim":
-            return jnp.broadcast_to(x.sum(axis=0, keepdims=True), x.shape)
-        assert self.mesh is not None
-
         def body(xl):
             return jax.lax.psum(xl, self.axis)
 
-        spec = P(self.axis, *([None] * (x.ndim - 1)))
-        return jax.shard_map(body, mesh=self.mesh, in_specs=spec,
-                             out_specs=spec)(x)
+        spec = self._spec(x.ndim)
+        return compat.shard_map(body, mesh=self.mesh, in_specs=spec,
+                                out_specs=spec)(x)
 
 
 # --------------------------------------------------------------------------- #
@@ -111,8 +220,8 @@ def unique_pairs(a: jnp.ndarray, b: jnp.ndarray, mask: jnp.ndarray,
 
     Returns (ua, ub, umask, rank) where (ua[j], ub[j]) are the unique pairs
     (sorted lexicographically, invalid at the back) and rank[i] gives the
-    unique-slot of input pair i (undefined where ~mask). Output length ==
-    input length."""
+    unique-slot of input pair i (undefined where ~mask, but always a safe
+    index in [0, n)). Output length == input length."""
     n = a.shape[0]
     av = jnp.where(mask, a, sentinel)
     bv = jnp.where(mask, b, sentinel)
@@ -121,10 +230,9 @@ def unique_pairs(a: jnp.ndarray, b: jnp.ndarray, mask: jnp.ndarray,
     first = jnp.concatenate(
         [jnp.array([True]), (a_s[1:] != a_s[:-1]) | (b_s[1:] != b_s[:-1])])
     valid_s = first & (a_s < sentinel)
-    # rank (in sorted order) of each sorted element's unique group
-    grp = jnp.cumsum(first) - 1                      # group id in sorted order
-    # unique slot j = rank among valid uniques; invalid groups map to n-1
-    uniq_slot_of_grp = jnp.cumsum(valid_s) - 1       # per sorted elem
+    # group id (in sorted order) and unique slot of each group's head
+    grp = jnp.cumsum(first) - 1
+    uniq_slot_of_grp = jnp.cumsum(valid_s) - 1
     # scatter unique pairs
     ucount = valid_s.sum()
     slot = jnp.where(valid_s, uniq_slot_of_grp, n - 1)
@@ -133,11 +241,7 @@ def unique_pairs(a: jnp.ndarray, b: jnp.ndarray, mask: jnp.ndarray,
     ub = jnp.full((n,), sentinel, dtype=b.dtype).at[slot].set(
         jnp.where(valid_s, b_s, sentinel), mode="drop")
     umask = jnp.arange(n) < ucount
-    # rank per input: invert the sort, then map group -> unique slot
-    grp_slot = uniq_slot_of_grp  # per sorted position, slot of its group head?
-    # each sorted elem's group head slot: gather slot at the head position
-    head_pos = jnp.maximum(jnp.cumsum(first) - 1, 0)
-    # slot for group g = uniq_slot at the head of group g; build per-group table
+    # rank per input: per-group table of head slots, then invert the sort
     slot_of_grp = jnp.zeros((n,), dtype=jnp.int32).at[grp].max(
         jnp.where(first, uniq_slot_of_grp, 0).astype(jnp.int32), mode="drop")
     rank_sorted = slot_of_grp[grp]

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map, tree_map
+
 
 def _quant(x: jnp.ndarray):
     scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
@@ -35,16 +37,16 @@ def compress_roundtrip(g, err):
         gh = _dequant(q, s)
         return gh.astype(gl.dtype), gl32 - gh
 
-    flat = jax.tree.map(leaf, g, err)
-    g_hat = jax.tree.map(lambda t: t[0], flat,
-                         is_leaf=lambda t: isinstance(t, tuple))
-    new_err = jax.tree.map(lambda t: t[1], flat,
-                           is_leaf=lambda t: isinstance(t, tuple))
+    flat = tree_map(leaf, g, err)
+    g_hat = tree_map(lambda t: t[0], flat,
+                     is_leaf=lambda t: isinstance(t, tuple))
+    new_err = tree_map(lambda t: t[1], flat,
+                       is_leaf=lambda t: isinstance(t, tuple))
     return g_hat, new_err
 
 
 def init_error_feedback(params):
-    return jax.tree.map(
+    return tree_map(
         lambda p: jnp.zeros(p.shape, jnp.float32), params)
 
 
@@ -63,4 +65,4 @@ def compressed_psum(x: jnp.ndarray, axis: str, mesh: Mesh) -> jnp.ndarray:
         return (qsum.astype(jnp.float32) * scale).astype(xl.dtype)
 
     spec = P(axis, *([None] * (x.ndim - 1)))
-    return jax.shard_map(body, mesh=mesh, in_specs=spec, out_specs=spec)(x)
+    return shard_map(body, mesh=mesh, in_specs=spec, out_specs=spec)(x)

@@ -7,10 +7,9 @@ stays reproducible and every hillclimb change is one flag.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
-import jax
-from jax.sharding import PartitionSpec as P
+from repro import compat
 
 
 @dataclass
@@ -40,7 +39,4 @@ def reset():
 def constrain(x, *spec):
     """with_sharding_constraint that degrades to identity outside a mesh
     context (single-device tests)."""
-    try:
-        return jax.lax.with_sharding_constraint(x, P(*spec))
-    except Exception:
-        return x
+    return compat.with_sharding_constraint(x, *spec)

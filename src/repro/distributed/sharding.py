@@ -16,9 +16,9 @@ shards the KV-cache *sequence* dim instead (batch=1).
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.compat import tree_map_with_path
 
 
 def dp_axes(mesh: Mesh) -> tuple[str, ...]:
@@ -94,7 +94,7 @@ def param_shardings(params, family: str, mesh: Mesh):
             fixed.append(ax if shape[i] % size == 0 else None)
         return NamedSharding(mesh, P(*fixed) if fixed else P())
 
-    return jax.tree_util.tree_map_with_path(spec_of, params)
+    return tree_map_with_path(spec_of, params)
 
 
 def data_shardings(family: str, kind: str, mesh: Mesh):

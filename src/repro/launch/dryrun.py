@@ -22,6 +22,7 @@ import traceback
 
 import jax
 
+from repro import compat
 from repro.configs import ARCH_IDS, all_cells, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import build_cell
@@ -97,8 +98,8 @@ def run_cell(arch: str, shape: str, mesh_kind: str, verbose: bool = True,
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
-    mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    mem = compat.memory_analysis(compiled)
+    cost = compat.cost_analysis(compiled)
     hlo = compiled.as_text()
     coll = parse_collective_bytes(hlo)
     mem_d = {}

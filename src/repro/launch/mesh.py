@@ -3,11 +3,16 @@
 Defined as FUNCTIONS so importing this module never touches jax device
 state; ``dryrun.py`` sets ``--xla_force_host_platform_device_count=512``
 before any jax import and then calls these.
+
+All construction goes through :mod:`repro.compat` so the version-drifting
+mesh-construction surface (axis-type kwargs and friends) lives in one file.
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.compat import default_axis_types
+from repro.compat import make_mesh as _compat_make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -17,18 +22,18 @@ def make_production_mesh(*, multi_pod: bool = False):
     all-reduce on the slow inter-pod links."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _compat_make_mesh(shape, axes,
+                             axis_types=default_axis_types(len(axes)))
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _compat_make_mesh(shape, axes,
+                             axis_types=default_axis_types(len(axes)))
 
 
 def make_engine_mesh(ndev: int | None = None):
     """1-D mesh for the enumeration engine (paper workload): every chip is a
     'machine' M_t holding one graph partition."""
     ndev = ndev or len(jax.devices())
-    return jax.make_mesh((ndev,), ("data",),
-                         axis_types=(AxisType.Auto,))
+    return _compat_make_mesh((ndev,), ("data",),
+                             axis_types=default_axis_types(1))

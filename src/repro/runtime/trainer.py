@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.checkpoint.checkpoint import (latest_step, load_checkpoint,
                                          save_checkpoint)
+from repro.compat import tree_map
 from repro.distributed.compression import (compress_roundtrip,
                                            init_error_feedback)
 from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
@@ -67,7 +68,7 @@ class Trainer:
         self._ckpt_thread = None
         self._last_ckpt_step = 0
         if param_shardings is not None:
-            self.params = jax.tree.map(
+            self.params = tree_map(
                 lambda p, s: jax.device_put(p, s), self.params, param_shardings)
 
         def _one_step(params, opt_state, err_fb, batch):
@@ -78,14 +79,14 @@ class Trainer:
                 def acc_body(carry, mb):
                     lsum, gsum = carry
                     l, g = jax.value_and_grad(microbatch_loss)(params, mb)
-                    gsum = jax.tree.map(jnp.add, gsum, g)
+                    gsum = tree_map(jnp.add, gsum, g)
                     return (lsum + l, gsum), None
-                zeros = jax.tree.map(
+                zeros = tree_map(
                     lambda p: jnp.zeros(p.shape, jnp.float32), params)
                 (lsum, gsum), _ = jax.lax.scan(
                     acc_body, (jnp.zeros(()), zeros), batch)
                 loss = lsum / tcfg.grad_accum
-                grads = jax.tree.map(lambda g: g / tcfg.grad_accum, gsum)
+                grads = tree_map(lambda g: g / tcfg.grad_accum, gsum)
             else:
                 loss, grads = jax.value_and_grad(microbatch_loss)(params, batch)
             if err_fb is not None:

@@ -1,0 +1,192 @@
+"""Minimal deterministic stand-in for ``hypothesis`` (vendored fallback).
+
+The container this suite must run in has no network, so ``pip install
+hypothesis`` is not an option; without this module 6 of 10 test modules
+die at collection.  Affected modules import via:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, strategies as st
+
+so the real package wins whenever it is installed.
+
+Scope (deliberately small): the strategy combinators this repo's tests
+use — ``integers``, ``booleans``, ``floats``, ``lists``, ``tuples``,
+``sampled_from``, ``composite``, ``data`` — plus ``@given`` and
+``@settings``.  Sampling is a fixed-seed PRNG keyed on the test's
+qualified name: runs are bit-reproducible across processes and machines
+(no shrinking, no example database, no deadlines).  The per-test example
+count is ``min(settings.max_examples, HYPOTHESIS_COMPAT_MAX_EXAMPLES)``
+(env var, default 20) to keep the fallback fast in tier-1.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import os
+import random
+import zlib
+
+_MAX_EXAMPLES_CAP = int(os.environ.get("HYPOTHESIS_COMPAT_MAX_EXAMPLES", "20"))
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+# --------------------------------------------------------------------------- #
+# Strategies
+# --------------------------------------------------------------------------- #
+class SearchStrategy:
+    """A strategy is just a draw function over a ``random.Random``."""
+
+    def __init__(self, draw_fn, name: str = "strategy"):
+        self._draw_fn = draw_fn
+        self._name = name
+
+    def example_from(self, rng: random.Random):
+        return self._draw_fn(rng)
+
+    def __repr__(self):
+        return self._name
+
+
+class DataObject:
+    """Handed out by ``st.data()``: interactive draws inside the test body."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: SearchStrategy, label: str | None = None):
+        return strategy.example_from(self._rng)
+
+
+class _Strategies:
+    """The ``strategies`` / ``st`` namespace."""
+
+    SearchStrategy = SearchStrategy
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> SearchStrategy:
+        def draw(rng):
+            # bias toward the boundaries, where off-by-ones live
+            r = rng.random()
+            if r < 0.05:
+                return min_value
+            if r < 0.10:
+                return max_value
+            return rng.randint(min_value, max_value)
+        return SearchStrategy(draw, f"integers({min_value}, {max_value})")
+
+    @staticmethod
+    def booleans() -> SearchStrategy:
+        return SearchStrategy(lambda rng: rng.random() < 0.5, "booleans()")
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, *, allow_nan: bool = False,
+               allow_infinity: bool = False) -> SearchStrategy:
+        def draw(rng):
+            r = rng.random()
+            if r < 0.05:
+                return float(min_value)
+            if r < 0.10:
+                return float(max_value)
+            if r < 0.15 and min_value <= 0.0 <= max_value:
+                return 0.0
+            return rng.uniform(min_value, max_value)
+        return SearchStrategy(draw, f"floats({min_value}, {max_value})")
+
+    @staticmethod
+    def lists(elements: SearchStrategy, *, min_size: int = 0,
+              max_size: int = 10) -> SearchStrategy:
+        def draw(rng):
+            size = rng.randint(min_size, max_size)
+            return [elements.example_from(rng) for _ in range(size)]
+        return SearchStrategy(draw, f"lists({elements!r})")
+
+    @staticmethod
+    def tuples(*elems: SearchStrategy) -> SearchStrategy:
+        return SearchStrategy(
+            lambda rng: tuple(e.example_from(rng) for e in elems),
+            f"tuples(<{len(elems)}>)")
+
+    @staticmethod
+    def sampled_from(seq) -> SearchStrategy:
+        seq = list(seq)
+        if not seq:
+            raise ValueError("sampled_from requires a non-empty sequence")
+        return SearchStrategy(lambda rng: seq[rng.randrange(len(seq))],
+                              f"sampled_from(<{len(seq)}>)")
+
+    @staticmethod
+    def composite(fn):
+        """``@st.composite``: ``fn(draw, *args)`` -> strategy factory."""
+        @functools.wraps(fn)
+        def factory(*args, **kwargs):
+            def draw_fn(rng):
+                return fn(lambda s: s.example_from(rng), *args, **kwargs)
+            return SearchStrategy(draw_fn, fn.__name__)
+        return factory
+
+    @staticmethod
+    def data() -> SearchStrategy:
+        return SearchStrategy(lambda rng: DataObject(rng), "data()")
+
+
+strategies = _Strategies()
+st = strategies
+
+
+# --------------------------------------------------------------------------- #
+# settings / given
+# --------------------------------------------------------------------------- #
+class settings:
+    """Records ``max_examples``; everything else is accepted and ignored."""
+
+    def __init__(self, max_examples: int = _DEFAULT_MAX_EXAMPLES,
+                 deadline=None, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        # compose in either decorator order with @given
+        target = getattr(fn, "__wrapped__", fn) if getattr(
+            fn, "_hc_is_given_runner", False) else fn
+        target._hc_settings = self
+        return fn
+
+
+def given(*arg_strategies: SearchStrategy, **kw_strategies: SearchStrategy):
+    """Run the test once per drawn example, deterministically.
+
+    The PRNG seed is ``crc32(test qualname)``, so a failing example
+    reproduces with a bare re-run and is stable across machines."""
+    def deco(fn):
+        # positional strategies fill the test's *rightmost* parameters (the
+        # real hypothesis does the same, leaving leading fixtures to pytest)
+        n_given = len(arg_strategies)
+        params = list(inspect.signature(fn).parameters.values())
+        given_names = [p.name for p in params[-n_given:]] if n_given else []
+        remaining = params[:-n_given] if n_given else params
+        remaining = [p for p in remaining if p.name not in kw_strategies]
+
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            s = getattr(fn, "_hc_settings", None) or settings()
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            n = max(1, min(s.max_examples, _MAX_EXAMPLES_CAP))
+            for i in range(n):
+                drawn = {name: strat.example_from(rng)
+                         for name, strat in zip(given_names, arg_strategies)}
+                drawn.update((k, v.example_from(rng))
+                             for k, v in kw_strategies.items())
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i} (fixed seed {seed}) for "
+                        f"{fn.__qualname__}: {drawn!r}") from e
+        # hide the strategy-filled parameters from pytest's fixture resolution
+        runner.__signature__ = inspect.Signature(remaining)
+        runner._hc_is_given_runner = True
+        runner.__wrapped__ = fn
+        return runner
+    return deco

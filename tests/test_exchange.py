@@ -1,10 +1,16 @@
-"""Static-shape primitives + the sim-mode exchange semantics."""
+"""Static-shape primitives + exchange-backend semantics and registry."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # hermetic container: vendored fallback
+    from _hypothesis_compat import given, settings, strategies as st
 
-from repro.core.exchange import (Exchange, compact, membership, unique_ids,
+from repro.core.exchange import (Exchange, ExchangeBackend, compact,
+                                 exchange_backends, membership,
+                                 register_exchange_backend, unique_ids,
                                  unique_pairs)
 
 
@@ -68,3 +74,82 @@ def test_sim_a2a_is_transpose_involution():
     for t in range(3):
         for s in range(3):
             assert jnp.array_equal(y[t, s], x[s, t])
+
+
+def test_unique_pairs_rank_duplicate_heavy():
+    """Regression for the dead-code cleanup in unique_pairs: rank[i] must
+    index the unique slot holding input pair i even when almost every pair
+    is a duplicate."""
+    a = jnp.array([3, 3, 1, 3, 1, 7, 3, 1, 3, 3])
+    b = jnp.array([0, 0, 2, 0, 2, 7, 0, 2, 0, 0])
+    m = jnp.ones(10, bool)
+    ua, ub, um, rank = unique_pairs(a, b, m, sentinel=9)
+    got = [(int(x), int(y)) for x, y, mm in zip(ua, ub, um) if mm]
+    assert got == [(1, 2), (3, 0), (7, 7)]
+    for i in range(10):
+        r = int(rank[i])
+        assert (int(ua[r]), int(ub[r])) == (int(a[i]), int(b[i]))
+
+
+def test_unique_pairs_all_masked():
+    """All-masked input: no uniques, every output slot is sentinel, and rank
+    stays a safe index (the engine gathers through it before masking)."""
+    n = 8
+    a = jnp.arange(n)
+    b = jnp.arange(n)[::-1]
+    m = jnp.zeros(n, bool)
+    ua, ub, um, rank = unique_pairs(a, b, m, sentinel=50)
+    assert int(um.sum()) == 0
+    assert jnp.all(ua == 50) and jnp.all(ub == 50)
+    assert jnp.all((rank >= 0) & (rank < n))
+
+
+def test_exchange_registry_and_unknown_mode():
+    assert {"sim", "spmd", "gather"} <= set(exchange_backends())
+    with pytest.raises(ValueError, match="unknown exchange mode"):
+        Exchange("no-such-backend")
+    with pytest.raises(ValueError, match="needs a mesh"):
+        Exchange("spmd")
+
+
+def test_register_custom_backend():
+    from repro.core import exchange as exchange_mod
+
+    @register_exchange_backend("_test_double")
+    class DoubleBytes(ExchangeBackend):
+        def a2a(self, x):
+            return jnp.swapaxes(x, 0, 1)
+
+        def off_device_bytes(self, counts, elem_bytes):
+            return super().off_device_bytes(counts, 2 * elem_bytes)
+
+    try:
+        ex = Exchange("_test_double")
+        counts = jnp.array([[5, 2], [3, 7]])
+        assert float(ex.off_device_bytes(counts, 4)) == 2 * (2 + 3) * 4
+        assert ex.mode == "_test_double"
+    finally:
+        exchange_mod._BACKENDS.pop("_test_double", None)
+    assert "_test_double" not in exchange_backends()
+
+
+def test_gather_backend_matches_sim():
+    sim, ga = Exchange("sim"), Exchange("gather")
+    x = jnp.arange(4 * 4 * 3, dtype=jnp.float32).reshape(4, 4, 3)
+    assert jnp.array_equal(sim.a2a(x), ga.a2a(x))
+    assert jnp.array_equal(sim.all_reduce_sum(x), ga.all_reduce_sum(x))
+    # a2a is an involution on both
+    assert jnp.array_equal(ga.a2a(ga.a2a(x)), x)
+
+
+def test_off_device_bytes_comparable_across_backends():
+    """The diagonal (self-traffic) is free; off-diagonal entries cost
+    elem_bytes each — identically on every built-in backend, so
+    bytes_fetch/bytes_verify stats are comparable when swapping modes."""
+    counts = jnp.array([[5, 2, 1], [3, 7, 0], [4, 4, 4]])
+    want = (2 + 1 + 3 + 0 + 4 + 4) * 9.0
+    from repro.launch.mesh import make_engine_mesh
+    backends = [Exchange("sim"), Exchange("gather"),
+                Exchange("spmd", mesh=make_engine_mesh(1))]
+    for ex in backends:
+        assert float(ex.off_device_bytes(counts, 9)) == want

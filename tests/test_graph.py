@@ -1,7 +1,10 @@
 """Graph substrate: CSR, partitioning, border distance, sampler."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # hermetic container: vendored fallback
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.graph import (Graph, edge_cut, erdos_graph, icosahedral_mesh,
                          partition, powerlaw_graph, road_graph,

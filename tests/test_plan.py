@@ -3,7 +3,10 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # hermetic container: vendored fallback
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs.rads import CLIQUE_QUERIES, QUERIES
 from repro.core import (Pattern, best_plan, bfs_fallback_plan, minimum_cds,

@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # hermetic container: vendored fallback
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
 from repro.configs import get_reduced
@@ -69,7 +72,8 @@ def test_checkpoint_elastic_resharding(tmp_path):
     """Checkpoint written 'on one mesh' restores onto a different sharding
     (here: device_put to the single device with a fresh layout)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
     tree = dict(w=jnp.arange(16.0).reshape(4, 4))
     save_checkpoint(str(tmp_path), 1, tree, blocking=True)
     sh = dict(w=NamedSharding(mesh, P("data", None)))

@@ -1,6 +1,9 @@
 """Embedding trie (§5): paper Example 6 fixture + property tests."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # hermetic container: vendored fallback
+    from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.trie import EmbeddingTrie, compression_report
 
