@@ -23,3 +23,14 @@ verify-all:
 ## collection regression gate: all 10 test modules must import cleanly
 collect-check:
 	$(PY) -m pytest -q --collect-only >/dev/null
+
+## ~30s enumeration benchmark subset; writes BENCH_enumeration.json
+## (patterns x backends wall/bytes + sync-vs-async overlap comparison)
+.PHONY: bench-smoke
+bench-smoke:
+	XLA_FLAGS="--xla_cpu_multi_thread_eigen=false" \
+	$(PY) -m benchmarks.run --only enumeration --smoke
+	@$(PY) -c "import json; d=json.load(open('BENCH_enumeration.json')); \
+	t=d['sync_vs_async_total']; \
+	print('bench-smoke: %d result rows, sync %.0fus async %.0fus (async<=sync: %s)' \
+	% (len(d['results']), t['sync_us'], t['async_us'], t['async_leq_sync']))"

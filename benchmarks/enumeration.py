@@ -1,27 +1,119 @@
 """Figures 8-11: per-(dataset x query) comparison — RADS vs PSgL vs
 TwinTwig vs SEED vs Crystal-lite. Metrics: wall time, communication volume
 (RADS: fetchV+verifyE bytes; baselines: shuffled intermediate bytes — the
-paper's headline axis), and peak intermediate rows (memory robustness)."""
+paper's headline axis), and peak intermediate rows (memory robustness).
+
+Besides the ``common.emit`` CSV lines, the run writes a machine-readable
+``BENCH_enumeration.json`` with two sections:
+
+* ``results``      — patterns × systems/backends: wall time, match count,
+  comm bytes (the perf-trajectory payload);
+* ``sync_vs_async`` — the staged scheduler timed on the *same warm jitted
+  stages* with ``depth=1`` (the old synchronous wave loop) vs
+  ``depth=2`` (double-buffered pipeline, lazy Algorithm-3 grouping and
+  embedding extraction overlapping device compute): wall times, overlap
+  speedup, in-flight depth, and wave counts.
+
+``run(smoke=True)`` (the ``make bench-smoke`` / CI entry) trims to a
+~30-second subset so the trajectory files always carry fresh numbers.
+"""
 from __future__ import annotations
 
+import json
 import time
 
 import numpy as np
 
 from benchmarks.common import emit
 from repro.configs.rads import DEFAULT_ENGINE, EngineConfig, QUERIES
-from repro.core import Pattern, rads_enumerate
+from repro.core import (GroupQueue, Pattern, PipelineScheduler, StageRunner,
+                        best_plan, extract_embeddings, iter_region_groups,
+                        rads_enumerate)
 from repro.core.baselines import (build_triangle_index, crystal_lite,
                                   join_enumerate, psgl_enumerate)
+from repro.core.engine import build_plan_data, graph_device_arrays
+from repro.core.exchange import Exchange
 from repro.graph import load_dataset, partition
 
 CFG = EngineConfig(frontier_cap=1 << 13, fetch_cap=1 << 10, verify_cap=1 << 12,
                    region_group_budget=1 << 12)
 
+# sync-vs-async cell: small waves + lazy grouping so the pipeline has both
+# many waves to overlap and real host-side work (Algorithm 3, np.unique
+# extraction) to hide behind device compute
+ASYNC_CFG = EngineConfig(frontier_cap=1 << 11, fetch_cap=256, verify_cap=512)
+ASYNC_BUDGET = 192.0
+ASYNC_COST = 12.0
+ASYNC_SCAP = 16
+ASYNC_REPS = 4
+
+JSON_PATH = "BENCH_enumeration.json"
+
+
+def _bench_sync_vs_async(pg, pat, backend: str, ndev: int) -> dict:
+    """Time depth=1 vs depth=2 on shared warm jitted stages (min over
+    paired reps; each rep re-runs lazy grouping + per-wave extraction)."""
+    pd = build_plan_data(best_plan(pat))
+    adj, deg, meta = graph_device_arrays(pg)
+    runner = StageRunner(adj, deg, meta, pd, ASYNC_CFG, Exchange(backend))
+
+    def make_queues():
+        qs = []
+        for t in range(ndev):
+            nl = int(pg.n_local[t])
+            cand = np.flatnonzero(pg.deg[t, :nl] >= pd.start_deg)
+            gids = (cand + t * pg.stride).astype(np.int64)
+            qs.append(GroupQueue(
+                lazy=iter_region_groups(pg, gids,
+                                        np.full(len(gids), ASYNC_COST),
+                                        ASYNC_BUDGET),
+                n_lazy_seeds=len(gids)))
+        return qs
+
+    stats = dict(overflow_retries=0, cap_escalations=0, n_waves=0,
+                 max_inflight_waves=0, steal_events=0, wave_s_total=0.0,
+                 bytes_fetch=0.0, bytes_verify=0.0)
+    embs: set = set()
+
+    def consume(rows, alive, counts, st, phase):
+        stats["bytes_fetch"] += float(st["bytes_fetch"])
+        stats["bytes_verify"] += float(st["bytes_verify"])
+        embs.update(extract_embeddings(np.asarray(rows), np.asarray(alive),
+                                       pd, pg))
+
+    sched = PipelineScheduler(runner, stats, consume)
+    sched.run(make_queues(), ASYNC_SCAP, local_only=False, phase="warm")
+    n_waves, count = stats["n_waves"], len(embs)
+    bytes_total = stats["bytes_fetch"] + stats["bytes_verify"]
+
+    def one(depth: int) -> float:
+        embs.clear()
+        queues = make_queues()
+        t0 = time.perf_counter()
+        sched.run(queues, ASYNC_SCAP, local_only=False, phase="bench",
+                  depth=depth)
+        return time.perf_counter() - t0
+
+    # paired + interleaved reps: host-load drift hits both modes equally
+    sync_s = async_s = float("inf")
+    for _ in range(ASYNC_REPS):
+        sync_s = min(sync_s, one(1))
+        async_s = min(async_s, one(2))
+    return dict(backend=backend, sync_us=sync_s * 1e6, async_us=async_s * 1e6,
+                speedup=sync_s / async_s,
+                async_leq_sync=bool(async_s <= sync_s),
+                n_waves=int(n_waves),
+                max_inflight_waves=int(stats["max_inflight_waves"]),
+                count=int(count), comm_bytes=float(bytes_total))
+
 
 def run(datasets=("dblp_bench", "roadnet_bench", "livejournal_bench",
                   "uk2002_bench"),
-        queries=("q1", "q2"), ndev: int = 4):
+        queries=("q1", "q2"), ndev: int = 4, smoke: bool = False,
+        json_path: str = JSON_PATH):
+    if smoke:   # the ~30s CI subset: one dataset, triangle query
+        datasets, queries = ("dblp_bench",), ("q1",)
+    out = {"results": [], "sync_vs_async": []}
     for ds in datasets:
         g = load_dataset(ds)
         pg = partition(g, ndev, method="bfs")
@@ -39,18 +131,78 @@ def run(datasets=("dblp_bench", "roadnet_bench", "livejournal_bench",
             emit(f"enum/{ds}/{q}/rads", t_rads,
                  f"count={r.count};comm_bytes={rads_bytes:.0f};"
                  f"sme={r.stats['n_sme_seeds']}")
-            p = psgl_enumerate(pg, pat, return_embeddings=False)
-            emit(f"enum/{ds}/{q}/psgl", p.seconds * 1e6,
-                 f"count={p.count};comm_bytes={p.bytes_shuffled:.0f};"
-                 f"peak_rows={p.peak_rows}")
-            for kind in ("twintwig", "seed"):
-                j = join_enumerate(pg, pat, kind, return_embeddings=False)
-                emit(f"enum/{ds}/{q}/{kind}", j.seconds * 1e6,
-                     f"count={j.count};comm_bytes={j.bytes_shuffled:.0f};"
-                     f"peak_rows={j.peak_rows}")
-            c = crystal_lite(pg, pat, g, tri_index=tri,
-                             return_embeddings=False)
-            emit(f"enum/{ds}/{q}/crystal", c.seconds * 1e6,
-                 f"count={c.count};index_bytes={c.extra['index_bytes']}")
-            counts = {r.count, p.count, c.count}
+            out["results"].append(dict(
+                dataset=ds, query=q, system="rads-sim", wall_us=t_rads,
+                count=int(r.count), comm_bytes=float(rads_bytes),
+                bytes_fetch=float(r.stats["bytes_fetch"]),
+                bytes_verify=float(r.stats["bytes_verify"]),
+                n_waves=int(r.stats["n_waves"]),
+                max_inflight_waves=int(r.stats["max_inflight_waves"])))
+            counts = {r.count}
+            if smoke:   # keep the patterns x backends axis in the subset
+                t0 = time.perf_counter()
+                rg = rads_enumerate(pg, pat, CFG, mode="gather",
+                                    return_embeddings=False)
+                t_g = (time.perf_counter() - t0) * 1e6
+                g_bytes = rg.stats["bytes_fetch"] + rg.stats["bytes_verify"]
+                emit(f"enum/{ds}/{q}/rads-gather", t_g,
+                     f"count={rg.count};comm_bytes={g_bytes:.0f}")
+                out["results"].append(dict(
+                    dataset=ds, query=q, system="rads-gather", wall_us=t_g,
+                    count=int(rg.count), comm_bytes=float(g_bytes)))
+                counts.add(rg.count)
+            if not smoke:
+                p = psgl_enumerate(pg, pat, return_embeddings=False)
+                emit(f"enum/{ds}/{q}/psgl", p.seconds * 1e6,
+                     f"count={p.count};comm_bytes={p.bytes_shuffled:.0f};"
+                     f"peak_rows={p.peak_rows}")
+                out["results"].append(dict(
+                    dataset=ds, query=q, system="psgl",
+                    wall_us=p.seconds * 1e6, count=int(p.count),
+                    comm_bytes=float(p.bytes_shuffled)))
+                for kind in ("twintwig", "seed"):
+                    j = join_enumerate(pg, pat, kind, return_embeddings=False)
+                    emit(f"enum/{ds}/{q}/{kind}", j.seconds * 1e6,
+                         f"count={j.count};comm_bytes={j.bytes_shuffled:.0f};"
+                         f"peak_rows={j.peak_rows}")
+                    out["results"].append(dict(
+                        dataset=ds, query=q, system=kind,
+                        wall_us=j.seconds * 1e6, count=int(j.count),
+                        comm_bytes=float(j.bytes_shuffled)))
+                c = crystal_lite(pg, pat, g, tri_index=tri,
+                                 return_embeddings=False)
+                emit(f"enum/{ds}/{q}/crystal", c.seconds * 1e6,
+                     f"count={c.count};index_bytes={c.extra['index_bytes']}")
+                out["results"].append(dict(
+                    dataset=ds, query=q, system="crystal",
+                    wall_us=c.seconds * 1e6, count=int(c.count)))
+                counts |= {p.count, c.count}
             assert len(counts) == 1, f"count mismatch {ds}/{q}: {counts}"
+
+    # ---- sync-vs-async overlap efficiency (staged scheduler) -------------- #
+    sv_datasets = ("dblp_bench",)            # grouping-heavy => overlap shows
+    sv_queries = ("q1",) if smoke else ("q1", "q2")
+    sv_backends = ("sim",) if smoke else ("sim", "gather")
+    for ds in sv_datasets:
+        g = load_dataset(ds)
+        pg = partition(g, ndev, method="bfs")
+        for q in sv_queries:
+            pat = Pattern.from_edges(QUERIES[q])
+            for backend in sv_backends:
+                cell = _bench_sync_vs_async(pg, pat, backend, ndev)
+                cell.update(dataset=ds, query=q)
+                out["sync_vs_async"].append(cell)
+                emit(f"enum_async/{ds}/{q}/{backend}", cell["async_us"],
+                     f"sync_us={cell['sync_us']:.0f};"
+                     f"speedup={cell['speedup']:.3f};"
+                     f"waves={cell['n_waves']};"
+                     f"inflight={cell['max_inflight_waves']}")
+
+    totals = dict(
+        sync_us=sum(c["sync_us"] for c in out["sync_vs_async"]),
+        async_us=sum(c["async_us"] for c in out["sync_vs_async"]))
+    totals["async_leq_sync"] = totals["async_us"] <= totals["sync_us"]
+    out["sync_vs_async_total"] = totals
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=1)
+    emit("enum_json", 0.0, f"path={json_path}")

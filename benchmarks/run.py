@@ -20,6 +20,9 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma list: enumeration,compression,plan,scale,"
                          "kernels,roofline")
+    ap.add_argument("--smoke", action="store_true",
+                    help="~30s subset (enumeration only honors this): "
+                         "one dataset/query + sync-vs-async JSON")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -33,7 +36,8 @@ def main() -> None:
         _safe(kernels_bench.run, failures, "kernels")
     if want("enumeration"):
         from benchmarks import enumeration
-        _safe(enumeration.run, failures, "enumeration")
+        _safe(lambda: enumeration.run(smoke=args.smoke), failures,
+              "enumeration")
     if want("compression"):
         from benchmarks import compression
         _safe(compression.run, failures, "compression")

@@ -24,6 +24,12 @@ class EngineConfig:
     enable_work_stealing: bool = True  # checkR/shareR analogue (seed rebalance)
     plan_rho: float = 1.0              # score-function exponent (paper uses 1)
     seed: int = 0
+    # --- async wave scheduler (core/scheduler.py) --------------------------- #
+    pipeline_depth: int = 2            # max in-flight waves (1 = synchronous)
+    steal_from_longest: bool = True    # refill drained group queues (checkR/shareR)
+    # --- accelerator kernels ------------------------------------------------ #
+    use_pallas_kernels: bool = False   # Pallas membership in back-edge checks
+                                       # (off on CPU: jnp reference is the test path)
 
 
 # dataset stand-ins: name -> generator kwargs (see graph/generators.py)

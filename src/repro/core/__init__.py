@@ -6,11 +6,16 @@ from repro.core.plan import (Plan, Unit, best_plan, enumerate_plans,
                              random_star_plan, min_rounds_unscored_plan,
                              compute_matching_order)
 from repro.core.engine import (PlanData, build_plan_data, run_rounds,
-                               graph_device_arrays, GraphMeta)
-from repro.core.driver import rads_enumerate, EnumerationResult
+                               graph_device_arrays, GraphMeta, WaveState,
+                               init_wave, fetch_stage, expand_stage,
+                               verify_stage, finalize_wave)
+from repro.core.scheduler import GroupQueue, PipelineScheduler, StageRunner
+from repro.core.driver import (rads_enumerate, EnumerationResult,
+                               extract_embeddings)
 from repro.core.oracle import enumerate_oracle, count_oracle, canonicalize
 from repro.core.trie import EmbeddingTrie, compression_report
-from repro.core.region import make_region_groups, proximity_groups
+from repro.core.region import (iter_region_groups, make_region_groups,
+                               proximity_groups)
 from repro.core.exchange import (Exchange, ExchangeBackend,
                                  exchange_backends,
                                  register_exchange_backend)
@@ -19,7 +24,11 @@ __all__ = [
     "Pattern", "Plan", "Unit", "best_plan", "enumerate_plans", "minimum_cds",
     "bfs_fallback_plan", "random_star_plan", "min_rounds_unscored_plan",
     "compute_matching_order", "PlanData", "build_plan_data", "run_rounds",
-    "graph_device_arrays", "GraphMeta", "rads_enumerate", "EnumerationResult",
+    "graph_device_arrays", "GraphMeta", "WaveState", "init_wave",
+    "fetch_stage", "expand_stage", "verify_stage", "finalize_wave",
+    "GroupQueue", "PipelineScheduler", "StageRunner",
+    "iter_region_groups",
+    "rads_enumerate", "EnumerationResult", "extract_embeddings",
     "enumerate_oracle", "count_oracle", "canonicalize", "EmbeddingTrie",
     "compression_report", "make_region_groups", "proximity_groups", "Exchange",
     "ExchangeBackend", "exchange_backends", "register_exchange_backend",

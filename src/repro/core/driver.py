@@ -1,35 +1,33 @@
-"""RADS host driver (§3.1 architecture).
+"""RADS host driver (§3.1 architecture) — setup and result assembly.
 
 Per machine: SM-E first (border-distance split, Prop. 1), then the
-distributed R-Meef phase over region groups, with
+distributed R-Meef phase over region groups.  Wave execution — including
+the overflow-driven robustness loop (group splitting + elastic capacity
+escalation, §6 memory control), checkR/shareR queue rebalancing, and the
+double-buffered async pipeline — lives in :mod:`repro.core.scheduler`;
+this module only
 
-* memory estimation calibrated from SM-E trie-node counters (§6),
-* work stealing as balanced seed re-partitioning (checkR/shareR analogue),
-* overflow-driven robustness loop: any capacity overflow is detected
-  in-engine; the offending region group is recursively halved (§6 memory
-  control), and if a *single seed* still overflows, capacities are doubled
-  and the step recompiled (elastic capacity escalation) — enumeration never
-  silently drops results.
+* classifies seeds (SM-E vs distributed, Prop. 1),
+* builds the per-device region-group queues (§6, Algorithm 3),
+* launches the two scheduler phases, and
+* assembles the :class:`EnumerationResult` (counts, embeddings, stats).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.rads import DEFAULT_ENGINE, EngineConfig
 from repro.core.engine import (PlanData, build_plan_data,
-                               graph_device_arrays, run_rounds)
-from repro.core.exchange import Exchange, ExchangeBackend
+                               graph_device_arrays)
+from repro.core.exchange import Exchange
 from repro.core.plan import Plan, best_plan
 from repro.core.query import Pattern
-from repro.core.region import make_region_groups
+from repro.core.region import iter_region_groups
+from repro.core.scheduler import GroupQueue, PipelineScheduler, StageRunner
 from repro.graph.storage import PartitionedGraph
-
-_MAX_CAP = 1 << 22
 
 
 @dataclass
@@ -39,62 +37,16 @@ class EnumerationResult:
     stats: dict = field(default_factory=dict)
 
 
-def _pad_seeds(seeds_per_dev: list[np.ndarray], ndev: int, scap: int,
-               sentinel: int) -> tuple[np.ndarray, np.ndarray]:
-    out = np.full((ndev, scap), sentinel, dtype=np.int32)
-    mask = np.zeros((ndev, scap), dtype=bool)
-    for t, s in enumerate(seeds_per_dev):
-        k = min(len(s), scap)
-        out[t, :k] = s[:k]
-        mask[t, :k] = True
-    return out, mask
-
-
-def _extract(rows: np.ndarray, alive: np.ndarray, pd: PlanData,
-             pg: PartitionedGraph) -> set[tuple[int, ...]]:
+def extract_embeddings(rows: np.ndarray, alive: np.ndarray, pd: PlanData,
+                       pg: PartitionedGraph) -> set[tuple[int, ...]]:
     """rows (ndev, cap, n_q) in matching order -> query-order tuples in
-    *original* vertex ids."""
-    out: set[tuple[int, ...]] = set()
+    *original* vertex ids (one vectorized unique over the whole block)."""
     r = rows[alive]
     if r.size == 0:
-        return out
+        return set()
     inv = np.argsort(np.array(pd.order))
-    for row in pg.new2old[r][:, inv]:
-        out.add(tuple(int(x) for x in row))
-    return out
-
-
-class _Runner:
-    """Holds the jitted step functions; re-jits on capacity escalation."""
-
-    def __init__(self, adj, deg, meta, pd: PlanData, cfg: EngineConfig,
-                 exch: ExchangeBackend):
-        self.adj, self.deg, self.meta = adj, deg, meta
-        self.pd, self.exch = pd, exch
-        self.cfg = cfg
-        self._build()
-
-    def _build(self):
-        meta, pd, cfg, exch = self.meta, self.pd, self.cfg, self.exch
-        self.sme_fn = jax.jit(lambda a, d, s, m: run_rounds(
-            a, d, meta, pd, cfg, exch, s, m, local_only=True))
-        self.dist_fn = jax.jit(lambda a, d, s, m: run_rounds(
-            a, d, meta, pd, cfg, exch, s, m, local_only=False))
-
-    def escalate(self) -> bool:
-        c = self.cfg
-        if c.frontier_cap >= _MAX_CAP:
-            return False
-        self.cfg = dataclasses.replace(
-            c, frontier_cap=min(c.frontier_cap * 2, _MAX_CAP),
-            fetch_cap=min(c.fetch_cap * 2, _MAX_CAP),
-            verify_cap=min(c.verify_cap * 2, _MAX_CAP))
-        self._build()
-        return True
-
-    def run(self, fn_name: str, seeds, mask):
-        fn = getattr(self, fn_name)
-        return fn(self.adj, self.deg, jnp.asarray(seeds), jnp.asarray(mask))
+    remapped = pg.new2old[r][:, inv]
+    return set(map(tuple, np.unique(remapped, axis=0).tolist()))
 
 
 def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
@@ -113,7 +65,7 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
         from jax.sharding import NamedSharding, PartitionSpec as P
         adj = jax.device_put(adj, NamedSharding(mesh, P("data", None, None)))
         deg = jax.device_put(deg, NamedSharding(mesh, P("data", None)))
-    runner = _Runner(adj, deg, meta, pd, cfg, exch)
+    runner = StageRunner(adj, deg, meta, pd, cfg, exch)
 
     # ---- candidate seeds per device: deg(v) >= deg(u_start) --------------- #
     ndev, stride = pg.ndev, pg.stride
@@ -135,7 +87,9 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
                  bytes_fetch=0.0, bytes_verify=0.0, n_groups=0,
                  overflow_retries=0, cap_escalations=0,
                  plan_rounds=plan.n_rounds,
-                 sme_count=0, dist_count=0)
+                 sme_count=0, dist_count=0,
+                 n_waves=0, max_inflight_waves=0, steal_events=0,
+                 wave_s_total=0.0, pipeline_depth=cfg.pipeline_depth)
     total = 0
     embs: set[tuple[int, ...]] = set()
 
@@ -147,46 +101,19 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
         stats["bytes_fetch"] += float(st["bytes_fetch"])
         stats["bytes_verify"] += float(st["bytes_verify"])
         if return_embeddings:
-            embs.update(_extract(np.asarray(rows), np.asarray(alive), pd, pg))
+            embs.update(extract_embeddings(np.asarray(rows),
+                                           np.asarray(alive), pd, pg))
 
-    def run_batches(fn_name: str, batches: list[list[np.ndarray]],
-                    scap: int, phase: str) -> float | None:
-        """Process per-device seed batches with split-on-overflow and
-        capacity escalation. Returns mean trie-node cost per seed."""
-        cost = None
-        stack = list(reversed(batches))
-        while stack:
-            cur = stack.pop()
-            if max((len(b) for b in cur), default=0) == 0:
-                continue
-            if max(len(b) for b in cur) > scap:
-                stack.append([b[scap:] for b in cur])
-                cur = [b[:scap] for b in cur]
-            seeds, mask = _pad_seeds(cur, ndev, scap, meta.n)
-            rows, alive, counts, complete, st = runner.run(fn_name, seeds, mask)
-            if not bool(complete):
-                if max(len(b) for b in cur) <= 1:
-                    if not runner.escalate():
-                        raise RuntimeError("capacity ceiling reached")
-                    stats["cap_escalations"] += 1
-                    stack.append(cur)
-                else:
-                    stats["overflow_retries"] += 1
-                    stack.append([b[len(b) // 2:] for b in cur])
-                    stack.append([b[:len(b) // 2] for b in cur])
-                continue
-            consume(rows, alive, counts, st, phase)
-            nc, mk = np.asarray(st["node_counts"]), np.asarray(mask)
-            if mk.any():
-                cost = float(nc[mk].mean())
-        return cost
+    sched = PipelineScheduler(runner, stats, consume)
 
     # ---- SM-E phase ------------------------------------------------------- #
     per_seed_cost = 4.0 * pattern.n
     max_sme = max((len(s) for s in sme_seeds), default=0)
     if max_sme > 0:
         scap = 1 << (min(max_sme, 4096) - 1).bit_length()
-        c = run_batches("sme_fn", _transpose_batches(sme_seeds), scap, "sme")
+        queues = [[np.asarray(s, dtype=np.int64)] if len(s) else []
+                  for s in sme_seeds]
+        c = sched.run(queues, scap, local_only=True, phase="sme")
         if c is not None:
             per_seed_cost = max(c, 1.0)
 
@@ -201,22 +128,23 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
                 [s for s in dist_seeds_all if s // stride == t]),
                 dtype=np.int64) for t in range(ndev)]
 
-        groups_per_dev = []
+        # group formation is *lazy*: the scheduler pulls groups on demand,
+        # so Algorithm-3 grouping of wave k+1 overlaps wave k's compute
+        queues = []
         for t in range(ndev):
             est = np.full(len(dist_seeds[t]), per_seed_cost)
-            groups_per_dev.append(make_region_groups(
-                pg, dist_seeds[t], est, float(cfg.region_group_budget),
-                seed=cfg.seed))
-        stats["n_groups"] = max((len(g) for g in groups_per_dev), default=0)
-        max_g = max((len(g) for gs in groups_per_dev for g in gs), default=1)
+            queues.append(GroupQueue(
+                lazy=iter_region_groups(pg, dist_seeds[t], est,
+                                        float(cfg.region_group_budget),
+                                        seed=cfg.seed),
+                n_lazy_seeds=len(dist_seeds[t])))
+        # static wave width from the grouping invariant (phi <= budget, one
+        # rollback slot) — groups cannot be sized without forming them all
+        max_g = int(float(cfg.region_group_budget) // max(per_seed_cost, 1.0))
+        max_g = max(1, min(max_g + 1, max(len(s) for s in dist_seeds)))
         scap = 1 << (max_g - 1).bit_length()
-
-        queues = [list(gs) for gs in groups_per_dev]
-        waves: list[list[np.ndarray]] = []
-        while any(queues):
-            waves.append([qs.pop(0) if qs else np.array([], dtype=np.int64)
-                          for qs in queues])
-        run_batches("dist_fn", waves, scap, "dist")
+        sched.run(queues, scap, local_only=False, phase="dist")
+        stats["n_groups"] = max(q.n_formed for q in queues)
 
     stats["final_caps"] = dict(frontier=runner.cfg.frontier_cap,
                                fetch=runner.cfg.fetch_cap,
@@ -224,9 +152,3 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
     return EnumerationResult(count=total,
                              embeddings=embs if return_embeddings else None,
                              stats=stats)
-
-
-def _transpose_batches(seeds_per_dev: list[np.ndarray]) -> list[list[np.ndarray]]:
-    """One wave containing each device's full SM-E seed list (run_batches
-    slices it into scap-sized chunks internally)."""
-    return [[np.asarray(s, dtype=np.int64) for s in seeds_per_dev]]

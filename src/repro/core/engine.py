@@ -14,22 +14,51 @@ One vectorized, static-shape engine serves four roles:
   ``ndev`` axis is sharded over the mesh and exchanges are ``all_to_all``.
 
 All shapes are static: capacities come from ``EngineConfig``; every overflow
-is *detected and flagged*, and the driver reacts by splitting region groups
+is *detected and flagged*, and the scheduler reacts by splitting region groups
 (§6 memory control — robustness mechanism, not an error path).
+
+The per-unit round is decomposed into three separately-jittable stages over
+an immutable :class:`WaveState` pytree —
+
+* :func:`fetch_stage`  — the batched ``fetchV`` request/response exchange,
+* :func:`expand_stage` — every ``_leaf_step`` of the unit (candidate
+  generation, local filters, EVI recording),
+* :func:`verify_stage` — the batched ``verifyE`` exchange + alive-masking —
+
+so that :mod:`repro.core.scheduler` can pipeline stages of *different*
+region-group waves (double-buffered exchanges).  :func:`run_rounds` remains
+as the synchronous composition of the stages; stage boundaries carry no
+semantics, so ``run_rounds == staged pipeline`` byte-for-byte.
+
+Membership tests (back-edge checks in ``_leaf_step`` and the ``verifyE``
+answer path) route through :mod:`repro.kernels.membership.ops`, which lowers
+to the Pallas TPU kernel when ``EngineConfig.use_pallas_kernels`` is set and
+to the jnp reference otherwise (the CPU test path).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.rads import EngineConfig
-from repro.core.exchange import (ExchangeBackend, compact, membership,
+from repro.core.exchange import (ExchangeBackend, compact,
                                  unique_ids, unique_pairs)
 from repro.core.plan import Plan
 from repro.graph.storage import PartitionedGraph
+from repro.kernels.membership.ops import membership as _membership_op
+
+
+def _membership(rows: jnp.ndarray, vals: jnp.ndarray,
+                use_pallas: bool = False) -> jnp.ndarray:
+    """Back-edge / verifyE membership test, kernel-gated.
+
+    ``use_pallas=False`` is the jnp reference lowering (CPU test path);
+    ``True`` runs the Pallas kernel (interpreted off-TPU)."""
+    return _membership_op(rows, vals, use_kernel=use_pallas,
+                          interpret=jax.default_backend() != "tpu")
 
 
 # --------------------------------------------------------------------------- #
@@ -158,7 +187,7 @@ def fetch_exchange(adj, meta: GraphMeta, exch: ExchangeBackend,
 
 
 def verify_exchange(adj, meta: GraphMeta, exch: ExchangeBackend,
-                    pa, pb, pmask, vcap: int):
+                    pa, pb, pmask, vcap: int, use_pallas: bool = False):
     """Batched verifyE over the EVI (§3.2). pa/pb/pmask: (ndev, R, K).
     Pairs routed to owner(pa). Returns (ok (ndev, R, K) — True where the
     edge exists or the slot is inactive, overflow, off_bytes)."""
@@ -180,14 +209,16 @@ def verify_exchange(adj, meta: GraphMeta, exch: ExchangeBackend,
         return ra, rb, ca, slot, ov_a | ov_b
 
     reqs_a, reqs_b, counts, slots, ov = jax.vmap(build)(ua, ub, umask, owners)
-    recv_a = exch.a2a(reqs_a)
-    recv_b = exch.a2a(reqs_b)
+    # the (a, b) request buffers travel as one sub-state through the backend
+    recv_a, recv_b = exch.a2a_tree((reqs_a, reqs_b))
 
     def answer(t, ra, rb):
         li = jnp.clip(ra - t * stride, 0, stride - 1)
         local_ok = (ra // stride == t) & (ra < n)
         rows = adj[t][li]                              # (src, vcap, D)
-        memb = jax.vmap(membership)(rows, rb[..., None])[..., 0]
+        D = rows.shape[-1]
+        memb = _membership(rows.reshape(-1, D), rb.reshape(-1, 1),
+                           use_pallas).reshape(rb.shape)
         return memb & local_ok
 
     ans = jax.vmap(answer)(jnp.arange(ndev), recv_a, recv_b)
@@ -256,7 +287,9 @@ def _leaf_step(adj, deg, meta: GraphMeta, cfg: EngineConfig, spec: StepSpec,
             wv = rws[:, c]
             w_loc = (wv // stride == t) & (wv < n)
             w_row = adj_t[jnp.clip(wv - t * stride, 0, stride - 1)]
-            valid &= jnp.where(w_loc[:, None], membership(w_row, cand), True)
+            valid &= jnp.where(
+                w_loc[:, None],
+                _membership(w_row, cand, cfg.use_pallas_kernels), True)
 
         # compact (R*D) -> cap
         parent = jnp.repeat(jnp.arange(R, dtype=jnp.int32), D)
@@ -299,70 +332,167 @@ def _leaf_step(adj, deg, meta: GraphMeta, cfg: EngineConfig, spec: StepSpec,
 
 
 # --------------------------------------------------------------------------- #
-# Full multi-round run
+# WaveState: the immutable per-wave pytree threaded through the stages
+# --------------------------------------------------------------------------- #
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class WaveState:
+    """Everything one region-group wave carries between pipeline stages.
+
+    ``rows`` widens by one column per leaf step, so stage functions are
+    jitted *per unit index* (each (unit, stage) pair has a distinct static
+    shape).  ``pend_*`` (the EVI buffers, Def. 5) exist only on the
+    expand→verify edge and are ``None`` elsewhere; ``rounds_alive`` grows by
+    one per-device count per completed unit."""
+
+    rows: jnp.ndarray            # (ndev, cap, width) partial embeddings
+    alive: jnp.ndarray           # (ndev, cap) bool
+    seed_slot: jnp.ndarray       # (ndev, cap) originating seed slot
+    overflow: jnp.ndarray        # () bool — any capacity overflow so far
+    lost: jnp.ndarray            # () bool — any dropped fetchV response
+    bytes_fetch: jnp.ndarray     # () f32 — off-device fetchV traffic
+    bytes_verify: jnp.ndarray    # () f32 — off-device verifyE traffic
+    node_counts: jnp.ndarray     # (ndev, scap) trie nodes per seed (§6 calib)
+    rounds_alive: tuple = ()     # per-unit (ndev,) alive counts
+    pend_a: jnp.ndarray | None = None   # (ndev, cap, K) EVI endpoint a
+    pend_b: jnp.ndarray | None = None   # (ndev, cap, K) EVI endpoint b
+    pend_m: jnp.ndarray | None = None   # (ndev, cap, K) EVI slot active
+
+    def tree_flatten(self):
+        return ((self.rows, self.alive, self.seed_slot, self.overflow,
+                 self.lost, self.bytes_fetch, self.bytes_verify,
+                 self.node_counts, self.rounds_alive,
+                 self.pend_a, self.pend_b, self.pend_m), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+def init_wave(meta: GraphMeta, seeds, seed_mask) -> WaveState:
+    """Stage 0: lift a padded (ndev, scap) seed block into a WaveState."""
+    ndev = meta.ndev
+    scap = seeds.shape[1]
+    return WaveState(
+        rows=seeds[..., None].astype(jnp.int32),
+        alive=seed_mask,
+        seed_slot=jnp.broadcast_to(
+            jnp.arange(scap, dtype=jnp.int32), seeds.shape),
+        overflow=jnp.zeros((), bool),
+        lost=jnp.zeros((), bool),
+        bytes_fetch=jnp.zeros((), jnp.float32),
+        bytes_verify=jnp.zeros((), jnp.float32),
+        node_counts=jnp.zeros((ndev, scap), jnp.int32))
+
+
+def unit_evi_width(pd: PlanData, ui: int) -> int:
+    """Number of EVI slots unit ``ui`` can emit (0 => verifyE is a no-op)."""
+    return sum(len(pd.steps[s].back_cols) for s in pd.unit_steps[ui])
+
+
+def fetch_stage(adj, meta: GraphMeta, pd: PlanData, cfg: EngineConfig,
+                exch: ExchangeBackend, ui: int, state: WaveState,
+                local_only: bool):
+    """Pipeline stage 1 of unit ``ui``: batched fetchV on the unit pivot.
+
+    Returns ``(state', bufs)`` where ``bufs = (req_ids, fetched)`` feeds
+    ``expand_stage`` (``None`` in SM-E mode — no collectives at all)."""
+    if local_only:
+        return state, None
+    piv_col = pd.unit_piv_cols[ui]
+    req_ids, fetched, f_ov, f_b = fetch_exchange(
+        adj, meta, exch, state.rows[:, :, piv_col], state.alive,
+        cfg.fetch_cap)
+    state = replace(state, overflow=state.overflow | f_ov,
+                    bytes_fetch=state.bytes_fetch + f_b)
+    return state, (req_ids, fetched)
+
+
+def expand_stage(adj, deg, meta: GraphMeta, pd: PlanData, cfg: EngineConfig,
+                 ui: int, state: WaveState, bufs, local_only: bool
+                 ) -> WaveState:
+    """Pipeline stage 2 of unit ``ui``: every leaf step of the unit —
+    candidate generation from (local ∪ fetched) adjacency, injectivity /
+    symmetry / degree / local-membership filters, frontier compaction, and
+    EVI recording into fresh ``pend_*`` buffers."""
+    step_ids = pd.unit_steps[ui]
+    scap = state.node_counts.shape[1]
+    K = max(unit_evi_width(pd, ui), 1)
+    rows, alive, seed_slot = state.rows, state.alive, state.seed_slot
+    overflow, lost, node_counts = state.overflow, state.lost, state.node_counts
+    pend_a = jnp.full((meta.ndev, rows.shape[1], K), meta.n, jnp.int32)
+    pend_b = jnp.full((meta.ndev, rows.shape[1], K), meta.n, jnp.int32)
+    pend_m = jnp.zeros((meta.ndev, rows.shape[1], K), bool)
+    req_ids, fetched = bufs if bufs is not None else (None, None)
+    k_off = 0
+    for sid in step_ids:
+        spec = pd.steps[sid]
+        (rows, alive, seed_slot, pend_a, pend_b, pend_m, ov_s, lost_s
+         ) = _leaf_step(adj, deg, meta, cfg, spec, k_off,
+                        rows, alive, seed_slot, pend_a, pend_b, pend_m,
+                        req_ids, fetched, local_only)
+        overflow |= ov_s
+        lost |= lost_s
+        k_off += len(spec.back_cols)
+        inc = jax.vmap(
+            lambda ss, al: jnp.zeros((scap,), jnp.int32)
+            .at[jnp.clip(ss, 0, scap - 1)].add(al.astype(jnp.int32))
+        )(seed_slot, alive)
+        node_counts += inc
+    return replace(state, rows=rows, alive=alive, seed_slot=seed_slot,
+                   overflow=overflow, lost=lost, node_counts=node_counts,
+                   pend_a=pend_a, pend_b=pend_b, pend_m=pend_m)
+
+
+def verify_stage(adj, meta: GraphMeta, pd: PlanData, cfg: EngineConfig,
+                 exch: ExchangeBackend, ui: int, state: WaveState,
+                 local_only: bool) -> WaveState:
+    """Pipeline stage 3 of unit ``ui``: batched verifyE over the EVI, then
+    alive-masking.  Consumes and clears the ``pend_*`` buffers and appends
+    the unit's per-device alive count to ``rounds_alive``."""
+    alive = state.alive
+    overflow, bytes_verify = state.overflow, state.bytes_verify
+    if (not local_only) and unit_evi_width(pd, ui) > 0:
+        ok, v_ov, v_b = verify_exchange(
+            adj, meta, exch, state.pend_a, state.pend_b, state.pend_m,
+            cfg.verify_cap, use_pallas=cfg.use_pallas_kernels)
+        alive = alive & jnp.all(ok, axis=-1)
+        overflow = overflow | v_ov
+        bytes_verify = bytes_verify + v_b
+    return replace(state, alive=alive, overflow=overflow,
+                   bytes_verify=bytes_verify,
+                   rounds_alive=state.rounds_alive + (alive.sum(axis=-1),),
+                   pend_a=None, pend_b=None, pend_m=None)
+
+
+def finalize_wave(state: WaveState):
+    """Drain point: WaveState -> the classic (rows, alive, counts, complete,
+    stats) tuple the driver consumes."""
+    counts = state.alive.sum(axis=-1)
+    stats = dict(bytes_fetch=state.bytes_fetch,
+                 bytes_verify=state.bytes_verify,
+                 rows_per_round=jnp.stack(state.rounds_alive),
+                 node_counts=state.node_counts)
+    return (state.rows, state.alive, counts,
+            ~(state.overflow | state.lost), stats)
+
+
+# --------------------------------------------------------------------------- #
+# Full multi-round run (synchronous composition of the stages)
 # --------------------------------------------------------------------------- #
 def run_rounds(adj, deg, meta: GraphMeta, pd: PlanData, cfg: EngineConfig,
                exch: ExchangeBackend, seeds, seed_mask, local_only: bool):
     """Traceable core: all units, all leaves, exchanges per round.
 
     seeds: (ndev, scap) global vertex ids.  Returns (rows, alive, counts,
-    complete, stats)."""
-    ndev = meta.ndev
-    scap = seeds.shape[1]
-    t_ids = jnp.arange(ndev)
-
-    rows = seeds[..., None].astype(jnp.int32)
-    alive = seed_mask
-    seed_slot = jnp.broadcast_to(
-        jnp.arange(scap, dtype=jnp.int32), seeds.shape)
-    overflow = jnp.zeros((), bool)
-    lost = jnp.zeros((), bool)
-    bytes_fetch = jnp.zeros((), jnp.float32)
-    bytes_verify = jnp.zeros((), jnp.float32)
-    node_counts = jnp.zeros((ndev, scap), jnp.int32)
-    rounds_alive = []
-
-    for ui, step_ids in enumerate(pd.unit_steps):
-        piv_col = pd.unit_piv_cols[ui]
-        if local_only:
-            req_ids = fetched = None
-        else:
-            req_ids, fetched, f_ov, f_b = fetch_exchange(
-                adj, meta, exch, rows[:, :, piv_col], alive, cfg.fetch_cap)
-            overflow |= f_ov
-            bytes_fetch += f_b
-
-        K = max(sum(len(pd.steps[s].back_cols) for s in step_ids), 1)
-        pend_a = jnp.full((ndev, rows.shape[1], K), meta.n, jnp.int32)
-        pend_b = jnp.full((ndev, rows.shape[1], K), meta.n, jnp.int32)
-        pend_m = jnp.zeros((ndev, rows.shape[1], K), bool)
-        k_off = 0
-
-        for sid in step_ids:
-            spec = pd.steps[sid]
-            (rows, alive, seed_slot, pend_a, pend_b, pend_m, ov_s, lost_s
-             ) = _leaf_step(adj, deg, meta, cfg, spec, k_off,
-                            rows, alive, seed_slot, pend_a, pend_b, pend_m,
-                            req_ids, fetched, local_only)
-            overflow |= ov_s
-            lost |= lost_s
-            k_off += len(spec.back_cols)
-            inc = jax.vmap(
-                lambda ss, al: jnp.zeros((scap,), jnp.int32)
-                .at[jnp.clip(ss, 0, scap - 1)].add(al.astype(jnp.int32))
-            )(seed_slot, alive)
-            node_counts += inc
-
-        if (not local_only) and k_off > 0:
-            ok, v_ov, v_b = verify_exchange(
-                adj, meta, exch, pend_a, pend_b, pend_m, cfg.verify_cap)
-            alive &= jnp.all(ok, axis=-1)
-            overflow |= v_ov
-            bytes_verify += v_b
-        rounds_alive.append(alive.sum(axis=-1))
-
-    counts = alive.sum(axis=-1)
-    stats = dict(bytes_fetch=bytes_fetch, bytes_verify=bytes_verify,
-                 rows_per_round=jnp.stack(rounds_alive),
-                 node_counts=node_counts)
-    return rows, alive, counts, ~(overflow | lost), stats
+    complete, stats).  This is exactly ``fetch→expand→verify`` per unit —
+    the async scheduler runs the same stages, interleaved across waves."""
+    state = init_wave(meta, seeds, seed_mask)
+    for ui in range(len(pd.unit_steps)):
+        state, bufs = fetch_stage(adj, meta, pd, cfg, exch, ui, state,
+                                  local_only)
+        state = expand_stage(adj, deg, meta, pd, cfg, ui, state, bufs,
+                             local_only)
+        state = verify_stage(adj, meta, pd, cfg, exch, ui, state, local_only)
+    return finalize_wave(state)

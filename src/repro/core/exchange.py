@@ -48,6 +48,13 @@ class ExchangeBackend:
         """x: (ndev_src, ndev_dst, ...) -> out[t, s] = x[s, t]."""
         raise NotImplementedError
 
+    def a2a_tree(self, tree):
+        """``a2a`` mapped over an arbitrary pytree of (ndev, ndev, ...)
+        buffers — the engine stages exchange whole sub-states (e.g. the
+        verifyE (a, b) request pair) in one call so a backend can fuse or
+        coalesce the flight however it likes."""
+        return compat.tree_map(self.a2a, tree)
+
     def all_reduce_sum(self, x: jnp.ndarray) -> jnp.ndarray:
         """x: (ndev, ...) -> summed-over-devices, broadcast back."""
         raise NotImplementedError

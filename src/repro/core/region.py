@@ -6,22 +6,30 @@ budget; groups are processed sequentially. Grouping maximizes neighborhood
 sharing via the paper's ``proximity`` measure (Eq. 5) for small candidate
 sets, falling back to sorted-id blocks (block partitions make id-adjacent
 vertices neighborhood-similar) for large ones.
+
+Both strategies are *incremental* generators (``iter_*``): Algorithm 3
+grows one group at a time, so the async wave scheduler pulls groups on
+demand and the (Python-side) grouping of wave ``k+1`` overlaps the device
+compute of wave ``k``.  The list-returning wrappers run the generators to
+exhaustion and are what the synchronous callers and the tests use; the
+generator and list forms produce *identical* groups (same RNG stream).
 """
 from __future__ import annotations
+
+from typing import Iterator
 
 import numpy as np
 
 from repro.graph.storage import PartitionedGraph
 
 
-def proximity_groups(pg: PartitionedGraph, cands: np.ndarray,
-                     est_cost: np.ndarray, budget: float,
-                     seed: int = 0) -> list[np.ndarray]:
-    """Algorithm 3, run to exhaustion (returns all groups, not just one)."""
+def iter_proximity_groups(pg: PartitionedGraph, cands: np.ndarray,
+                          est_cost: np.ndarray, budget: float,
+                          seed: int = 0) -> Iterator[np.ndarray]:
+    """Algorithm 3, one group per ``next()`` (run to exhaustion for all)."""
     rng = np.random.default_rng(seed)
     remaining = list(map(int, cands))
     cost = {int(v): float(c) for v, c in zip(cands, est_cost)}
-    groups: list[np.ndarray] = []
     while remaining:
         i = int(rng.integers(len(remaining)))
         v0 = remaining.pop(i)
@@ -46,33 +54,50 @@ def proximity_groups(pg: PartitionedGraph, cands: np.ndarray,
             rg.append(v)
             phi += cost[v]
             nbr_set.update(map(int, pg.neighbors(v)))
-        groups.append(np.array(rg, dtype=np.int64))
-    return groups
+        yield np.array(rg, dtype=np.int64)
 
 
-def block_groups(cands: np.ndarray, est_cost: np.ndarray,
-                 budget: float) -> list[np.ndarray]:
+def iter_block_groups(cands: np.ndarray, est_cost: np.ndarray,
+                      budget: float) -> Iterator[np.ndarray]:
     """Sorted-id greedy packing (locality from block partitioning)."""
     order = np.argsort(cands)
     cands, est_cost = cands[order], est_cost[order]
-    groups, cur, phi = [], [], 0.0
+    cur, phi = [], 0.0
     for v, c in zip(cands, est_cost):
         if cur and phi + c > budget:
-            groups.append(np.array(cur, dtype=np.int64))
+            yield np.array(cur, dtype=np.int64)
             cur, phi = [], 0.0
         cur.append(int(v))
         phi += float(c)
     if cur:
-        groups.append(np.array(cur, dtype=np.int64))
-    return groups
+        yield np.array(cur, dtype=np.int64)
+
+
+def iter_region_groups(pg: PartitionedGraph, cands: np.ndarray,
+                       est_cost: np.ndarray, budget: float,
+                       proximity_threshold: int = 256,
+                       seed: int = 0) -> Iterator[np.ndarray]:
+    if len(cands) == 0:
+        return iter(())
+    if len(cands) <= proximity_threshold:
+        return iter_proximity_groups(pg, cands, est_cost, budget, seed)
+    return iter_block_groups(cands, est_cost, budget)
+
+
+def proximity_groups(pg: PartitionedGraph, cands: np.ndarray,
+                     est_cost: np.ndarray, budget: float,
+                     seed: int = 0) -> list[np.ndarray]:
+    return list(iter_proximity_groups(pg, cands, est_cost, budget, seed))
+
+
+def block_groups(cands: np.ndarray, est_cost: np.ndarray,
+                 budget: float) -> list[np.ndarray]:
+    return list(iter_block_groups(cands, est_cost, budget))
 
 
 def make_region_groups(pg: PartitionedGraph, cands: np.ndarray,
                        est_cost: np.ndarray, budget: float,
                        proximity_threshold: int = 256,
                        seed: int = 0) -> list[np.ndarray]:
-    if len(cands) == 0:
-        return []
-    if len(cands) <= proximity_threshold:
-        return proximity_groups(pg, cands, est_cost, budget, seed)
-    return block_groups(cands, est_cost, budget)
+    return list(iter_region_groups(pg, cands, est_cost, budget,
+                                   proximity_threshold, seed))

@@ -1,0 +1,349 @@
+"""Asynchronous region-group wave scheduler (the RADS pipeline driver).
+
+The engine exposes each R-Meef unit as three separately-jittable stages
+over an immutable :class:`~repro.core.engine.WaveState`:
+
+    fetch_stage  -> expand_stage -> verify_stage        (one unit)
+
+This module pipelines those stages across *region-group waves*.  JAX's
+async dispatch means a jitted stage call returns immediately with futures;
+the scheduler therefore keeps up to ``EngineConfig.pipeline_depth`` waves
+in flight and interleaves their stage dispatches oldest-first, blocking
+(the only ``jax.block_until_ready``-style sync point) solely when the
+oldest wave is retired.  With ``pipeline_depth=2`` (double buffering) the timeline is::
+
+    wave k   : fetchV[u0] expand[u0] verifyE[u0] fetchV[u1] ...  ──┐ retire k
+    wave k+1 :     fetchV[u0]  expand[u0]  verifyE[u0]     ...  ───┼────┐
+    wave k+2 :                         (admitted when k retires)  ─┘    │ ...
+               ── device queue: stages execute in dispatch order ──────────►
+
+i.e. while wave ``k`` is still executing its ``verify_stage``, wave
+``k+1``'s ``fetch_stage`` is already dispatched — the paper's asynchronous
+region-group processing (§3, §6) without host threads.  ``pipeline_depth=1``
+degrades to the old synchronous driver loop (one wave at a time).
+
+The scheduler also owns the robustness mechanisms that used to live in the
+driver's ``run_batches``:
+
+* **overflow split** (§6 memory control): an incomplete wave is halved and
+  both halves re-queued (LIFO, so sub-waves finish before new groups start);
+* **capacity escalation**: a single-seed wave that still overflows doubles
+  the engine capacities and re-jits the stages (elastic capacities —
+  enumeration never silently drops results);
+* **steal-from-longest** (the paper's checkR/shareR): when a device's group
+  queue drains before its peers', the next wave refills its slot from the
+  tail of the longest surviving queue;
+* **per-seed cost calibration**: trie-node counts are accumulated as a
+  *running mean over every completed wave* (not the last batch), feeding
+  the region-group budget of the distributed phase;
+* **per-wave timing / byte stats** so benchmarks can report overlap
+  efficiency (``wave_s_total`` vs ``*_pipeline_s`` wall time).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.configs.rads import EngineConfig
+from repro.core.engine import (GraphMeta, PlanData, WaveState, expand_stage,
+                               fetch_stage, finalize_wave, init_wave,
+                               verify_stage)
+from repro.core.exchange import ExchangeBackend
+
+_MAX_CAP = 1 << 22
+
+
+def _pad_seeds(seeds_per_dev: list[np.ndarray], ndev: int, scap: int,
+               sentinel: int) -> tuple[np.ndarray, np.ndarray]:
+    out = np.full((ndev, scap), sentinel, dtype=np.int32)
+    mask = np.zeros((ndev, scap), dtype=bool)
+    for t, s in enumerate(seeds_per_dev):
+        k = min(len(s), scap)
+        out[t, :k] = s[:k]
+        mask[t, :k] = True
+    return out, mask
+
+
+# --------------------------------------------------------------------------- #
+# GroupQueue: one device's FIFO of region groups, optionally lazily formed
+# --------------------------------------------------------------------------- #
+class GroupQueue:
+    """Per-device queue of region groups.
+
+    Backed by either a pre-formed list or a *lazy* group generator (see
+    :func:`repro.core.region.iter_region_groups`): with a lazy source the
+    Python-side group formation of wave ``k+1`` runs while wave ``k``
+    computes on the device — grouping cost is hidden inside the pipeline.
+
+    ``seeds_left`` (pre-formed + an estimate of unformed seeds) is the
+    steal-from-longest load metric."""
+
+    def __init__(self, groups=(), lazy=None, n_lazy_seeds: int = 0):
+        self._buf: deque[np.ndarray] = deque(groups)
+        self._lazy = lazy
+        self._lazy_left = int(n_lazy_seeds) if lazy is not None else 0
+        self.n_formed = len(self._buf)
+
+    @property
+    def seeds_left(self) -> int:
+        return sum(len(g) for g in self._buf) + self._lazy_left
+
+    def __bool__(self) -> bool:
+        return self.seeds_left > 0
+
+    def _form(self) -> np.ndarray | None:
+        if self._lazy is None:
+            return None
+        g = next(self._lazy, None)
+        if g is None:
+            self._lazy_left = 0
+            return None
+        self._lazy_left = max(0, self._lazy_left - len(g))
+        self.n_formed += 1
+        return g
+
+    def pop_head(self) -> np.ndarray | None:
+        if self._buf:
+            return self._buf.popleft()
+        return self._form()
+
+    def pop_tail(self) -> np.ndarray | None:
+        """Steal entry point: take buffered work from the tail, else form
+        the victim's next group."""
+        if self._buf:
+            return self._buf.pop()
+        return self._form()
+
+
+# --------------------------------------------------------------------------- #
+# StageRunner: the jitted per-unit stage functions
+# --------------------------------------------------------------------------- #
+class StageRunner:
+    """Holds graph device arrays plus a lazily-built cache of jitted stage
+    functions keyed by ``(stage, unit, local_only)``; capacity escalation
+    doubles the engine caps and clears the cache (re-jit)."""
+
+    def __init__(self, adj, deg, meta: GraphMeta, pd: PlanData,
+                 cfg: EngineConfig, exch: ExchangeBackend):
+        self.adj, self.deg, self.meta = adj, deg, meta
+        self.pd, self.exch = pd, exch
+        self.cfg = cfg
+        self._fns: dict = {}
+
+    @property
+    def n_units(self) -> int:
+        return len(self.pd.unit_steps)
+
+    def escalate(self) -> bool:
+        """Double every engine capacity (up to the ceiling) and re-jit."""
+        c = self.cfg
+        if c.frontier_cap >= _MAX_CAP:
+            return False
+        self.cfg = dataclasses.replace(
+            c, frontier_cap=min(c.frontier_cap * 2, _MAX_CAP),
+            fetch_cap=min(c.fetch_cap * 2, _MAX_CAP),
+            verify_cap=min(c.verify_cap * 2, _MAX_CAP))
+        self._fns.clear()
+        return True
+
+    def _get(self, key, make):
+        fn = self._fns.get(key)
+        if fn is None:
+            fn = self._fns[key] = make()
+        return fn
+
+    def init(self, seeds: np.ndarray, mask: np.ndarray) -> WaveState:
+        meta = self.meta
+        fn = self._get("init", lambda: jax.jit(
+            lambda s, m: init_wave(meta, s, m)))
+        return fn(seeds, mask)
+
+    def fetch(self, ui: int, state: WaveState, local_only: bool):
+        if local_only:                       # SM-E: no collectives at all
+            return state, None
+        meta, pd, cfg, exch = self.meta, self.pd, self.cfg, self.exch
+        fn = self._get(("fetch", ui), lambda: jax.jit(
+            lambda a, s: fetch_stage(a, meta, pd, cfg, exch, ui, s, False)))
+        return fn(self.adj, state)
+
+    def expand(self, ui: int, state: WaveState, bufs, local_only: bool):
+        meta, pd, cfg = self.meta, self.pd, self.cfg
+        fn = self._get(("expand", ui, local_only), lambda: jax.jit(
+            lambda a, d, s, b: expand_stage(a, d, meta, pd, cfg, ui, s, b,
+                                            local_only)))
+        return fn(self.adj, self.deg, state, bufs)
+
+    def verify(self, ui: int, state: WaveState, local_only: bool):
+        meta, pd, cfg, exch = self.meta, self.pd, self.cfg, self.exch
+        fn = self._get(("verify", ui, local_only), lambda: jax.jit(
+            lambda a, s: verify_stage(a, meta, pd, cfg, exch, ui, s,
+                                      local_only)))
+        return fn(self.adj, state)
+
+
+# --------------------------------------------------------------------------- #
+# Pipeline scheduler
+# --------------------------------------------------------------------------- #
+@dataclass
+class _Wave:
+    """One in-flight region-group wave: host-side batches (for the split
+    loop), the device-side state futures, and a stage cursor."""
+    batches: list[np.ndarray]
+    mask: np.ndarray
+    state: WaveState
+    stages: list[tuple[str, int]]
+    pos: int = 0
+    bufs: object = None
+    t_start: float = field(default_factory=time.perf_counter)
+
+
+class PipelineScheduler:
+    """Drives region-group waves through the staged engine with up to
+    ``cfg.pipeline_depth`` waves in flight (see module docstring)."""
+
+    def __init__(self, runner: StageRunner, stats: dict, consume):
+        self.runner = runner
+        self.stats = stats
+        self.consume = consume      # (rows, alive, counts, st, phase) -> None
+
+    # -- wave formation ----------------------------------------------------- #
+    def _next_wave(self, queues: list[GroupQueue], retry: list,
+                   scap: int, local_only: bool):
+        """Pop the next wave: retries first (LIFO — finish split sub-waves
+        before admitting new groups), else one group per device queue with
+        steal-from-longest refill; oversized batches are chunked to scap."""
+        cfg = self.runner.cfg
+        empty = np.array([], dtype=np.int64)
+        while True:
+            if retry:
+                wave = retry.pop()
+            elif any(queues):
+                wave = [q.pop_head() if q else None for q in queues]
+                wave = [empty if b is None else b for b in wave]
+                # both knobs gate the checkR/shareR analogue: --no-steal
+                # (enable_work_stealing) must disable the group-queue
+                # rebalance too, or the ablation silently still steals
+                if (cfg.enable_work_stealing and cfg.steal_from_longest
+                        and not local_only):
+                    for t, b in enumerate(wave):
+                        if len(b) > 0:
+                            continue
+                        src = max(range(len(queues)),
+                                  key=lambda u: queues[u].seeds_left)
+                        if queues[src]:       # this device drained early:
+                            stolen = queues[src].pop_tail()
+                            if stolen is not None:
+                                wave[t] = stolen
+                                self.stats["steal_events"] += 1
+            else:
+                return None
+            if max((len(b) for b in wave), default=0) == 0:
+                continue
+            if max(len(b) for b in wave) > scap:
+                retry.append([b[scap:] for b in wave])
+                wave = [b[:scap] for b in wave]
+            return wave
+
+    def _admit(self, wave: list[np.ndarray], scap: int) -> _Wave:
+        meta = self.runner.meta
+        seeds, mask = _pad_seeds(wave, meta.ndev, scap, meta.n)
+        state = self.runner.init(seeds, mask)
+        stages = [(kind, ui) for ui in range(self.runner.n_units)
+                  for kind in ("fetch", "expand", "verify")]
+        return _Wave(batches=wave, mask=mask, state=state, stages=stages)
+
+    def _dispatch(self, w: _Wave, local_only: bool):
+        kind, ui = w.stages[w.pos]
+        if kind == "fetch":
+            w.state, w.bufs = self.runner.fetch(ui, w.state, local_only)
+        elif kind == "expand":
+            w.state = self.runner.expand(ui, w.state, w.bufs, local_only)
+            w.bufs = None
+        else:
+            w.state = self.runner.verify(ui, w.state, local_only)
+        w.pos += 1
+
+    # -- retire + robustness loop ------------------------------------------- #
+    def _retire(self, w: _Wave, retry: list, phase: str
+                ) -> tuple[float, int]:
+        """Drain point: block on the wave's completeness flag; consume on
+        success, split/escalate on overflow.  Returns (node_cost_sum, n)."""
+        rows, alive, counts, complete, st = finalize_wave(w.state)
+        if not bool(complete):               # <- the only blocking sync
+            if max(len(b) for b in w.batches) <= 1:
+                if not self.runner.escalate():
+                    raise RuntimeError("capacity ceiling reached")
+                self.stats["cap_escalations"] += 1
+                retry.append(w.batches)
+            else:
+                self.stats["overflow_retries"] += 1
+                retry.append([b[len(b) // 2:] for b in w.batches])
+                retry.append([b[:len(b) // 2] for b in w.batches])
+            return 0.0, 0
+        self.consume(rows, alive, counts, st, phase)
+        self.stats["wave_s_total"] += time.perf_counter() - w.t_start
+        nc = np.asarray(st["node_counts"])[w.mask]
+        return float(nc.sum()), int(nc.size)
+
+    # -- main loop ----------------------------------------------------------- #
+    def run(self, queues, scap: int,
+            local_only: bool, phase: str, depth: int | None = None
+            ) -> float | None:
+        """Process per-device group queues (GroupQueue instances or plain
+        lists of seed arrays) until empty.  Returns the mean trie-node cost
+        per completed seed (running mean over *all* waves).
+
+        ``depth`` overrides ``cfg.pipeline_depth`` — it is a host-side
+        scheduling knob only (no recompilation), which lets benchmarks time
+        sync (1) vs async (>=2) on the same warm jitted stages."""
+        if depth is None:
+            depth = self.runner.cfg.pipeline_depth
+        depth = max(1, int(depth))
+        queues = [q if isinstance(q, GroupQueue) else GroupQueue(q)
+                  for q in queues]
+        retry: list[list[np.ndarray]] = []
+        inflight: deque[_Wave] = deque()
+        cost_sum, cost_n = 0.0, 0
+        t0 = time.perf_counter()
+        while True:
+            # 1. advance every in-flight wave one stage, oldest first — this
+            #    enqueues fetchV of wave k+1 behind (not after!) verifyE of
+            #    wave k on the device stream, and crucially keeps the device
+            #    fed *before* any slow host-side work below.
+            for w in tuple(inflight):
+                if w.pos < len(w.stages):
+                    self._dispatch(w, local_only)
+            # 2. top up the pipeline with at most ONE wave per tick; its
+            #    first stage dispatches immediately.  Lazy group formation
+            #    (the expensive Algorithm-3 Python loop) therefore overlaps
+            #    the already-dispatched compute of the older waves.
+            if len(inflight) < depth:
+                wave = self._next_wave(queues, retry, scap, local_only)
+                if wave is not None:
+                    w = self._admit(wave, scap)
+                    inflight.append(w)
+                    self._dispatch(w, local_only)
+                    self.stats["n_waves"] += 1
+                    self.stats["max_inflight_waves"] = max(
+                        self.stats["max_inflight_waves"], len(inflight))
+            if not inflight:
+                break
+            # 3. retire the oldest wave once fully dispatched
+            if inflight[0].pos >= len(inflight[0].stages):
+                # NOTE: if retiring escalates capacities, a younger in-flight
+                # wave keeps its already-dispatched old-capacity futures but
+                # its *remaining* stages re-jit at the new capacities — a
+                # mixed-capacity wave is still exact (overflow is monotone
+                # and re-checked at its own retire).
+                s, n = self._retire(inflight.popleft(), retry, phase)
+                cost_sum += s
+                cost_n += n
+        self.stats[f"{phase}_pipeline_s"] = (
+            self.stats.get(f"{phase}_pipeline_s", 0.0)
+            + time.perf_counter() - t0)
+        return cost_sum / cost_n if cost_n else None

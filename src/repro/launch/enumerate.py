@@ -19,7 +19,13 @@ def main():
     ap.add_argument("--partition", default="bfs", choices=["bfs", "block", "hash"])
     ap.add_argument("--no-sme", action="store_true")
     ap.add_argument("--no-steal", action="store_true")
-    ap.add_argument("--mode", default="sim", choices=["sim", "spmd"])
+    ap.add_argument("--mode", default="sim", choices=["sim", "gather", "spmd"])
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="max in-flight waves (1 = synchronous driver)")
+    ap.add_argument("--no-steal-groups", action="store_true",
+                    help="disable steal-from-longest group-queue refill")
+    ap.add_argument("--pallas", action="store_true",
+                    help="Pallas membership kernel in back-edge checks")
     args = ap.parse_args()
 
     pattern = Pattern.from_edges({**QUERIES, **CLIQUE_QUERIES}[args.query])
@@ -33,7 +39,10 @@ def main():
     import dataclasses
     cfg = dataclasses.replace(DEFAULT_ENGINE,
                               enable_sme=not args.no_sme,
-                              enable_work_stealing=not args.no_steal)
+                              enable_work_stealing=not args.no_steal,
+                              pipeline_depth=args.pipeline_depth,
+                              steal_from_longest=not args.no_steal_groups,
+                              use_pallas_kernels=args.pallas)
     mesh = None
     if args.mode == "spmd":
         from repro.launch.mesh import make_engine_mesh
@@ -48,6 +57,11 @@ def main():
           f"fetchV {st['bytes_fetch']/1e6:.2f}MB verifyE "
           f"{st['bytes_verify']/1e6:.2f}MB | groups {st['n_groups']} "
           f"retries {st['overflow_retries']} escalations {st['cap_escalations']}")
+    print(f"[enum] pipeline: depth {st['pipeline_depth']} | "
+          f"{st['n_waves']} waves, max {st['max_inflight_waves']} in flight | "
+          f"steals {st['steal_events']} | "
+          f"wave-time {st['wave_s_total']:.2f}s over "
+          f"{st.get('dist_pipeline_s', 0.0) + st.get('sme_pipeline_s', 0.0):.2f}s wall")
 
 
 if __name__ == "__main__":

@@ -47,9 +47,22 @@ def test_spmd_engine_matches_oracle():
             sim = rads_enumerate(pg, pat, cfg, mode='sim')
             ok &= canonicalize(spmd.embeddings, pat) == oracle
             ok &= canonicalize(sim.embeddings, pat) == oracle
-        print(json.dumps(dict(ok=bool(ok))))
+            ok &= spmd.stats['bytes_fetch'] == sim.stats['bytes_fetch']
+            ok &= spmd.stats['bytes_verify'] == sim.stats['bytes_verify']
+        # multi-group workload: the async staged scheduler must pipeline
+        # >= 2 waves through the real all_to_all spmd backend
+        import dataclasses
+        many = dataclasses.replace(cfg, region_group_budget=64,
+                                   enable_sme=False)
+        pat = Pattern.from_edges(QUERIES['q1'])
+        oracle = canonicalize(enumerate_oracle(g, pat), pat)
+        spmd = rads_enumerate(pg, pat, many, mode='spmd', mesh=mesh)
+        ok &= canonicalize(spmd.embeddings, pat) == oracle
+        inflight = spmd.stats['max_inflight_waves']
+        print(json.dumps(dict(ok=bool(ok), inflight=int(inflight))))
     """))
     assert res["ok"]
+    assert res["inflight"] >= 2
 
 
 @pytest.mark.slow
