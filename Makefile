@@ -25,12 +25,24 @@ collect-check:
 	$(PY) -m pytest -q --collect-only >/dev/null
 
 ## ~30s enumeration benchmark subset; writes BENCH_enumeration.json
-## (patterns x backends wall/bytes + sync-vs-async overlap comparison)
+## (patterns x backends x storage formats, compile vs steady wall split,
+## peak_adj_bytes dense-vs-bucketed, sync-vs-async overlap comparison).
+## Fails if the dense and bucketed storage formats disagree on any count.
 .PHONY: bench-smoke
 bench-smoke:
 	XLA_FLAGS="--xla_cpu_multi_thread_eigen=false" \
 	$(PY) -m benchmarks.run --only enumeration --smoke
-	@$(PY) -c "import json; d=json.load(open('BENCH_enumeration.json')); \
+	@$(PY) -c "import json, collections; \
+	d=json.load(open('BENCH_enumeration.json')); \
 	t=d['sync_vs_async_total']; \
-	print('bench-smoke: %d result rows, sync %.0fus async %.0fus (async<=sync: %s)' \
-	% (len(d['results']), t['sync_us'], t['async_us'], t['async_leq_sync']))"
+	rows=[r for r in d['results'] if r.get('storage')]; \
+	byq=collections.defaultdict(set); \
+	[byq[(r['dataset'], r['query'])].add(r['count']) for r in rows]; \
+	bad={k: sorted(v) for k, v in byq.items() if len(v) != 1}; \
+	assert not bad, 'dense vs bucketed count divergence: %r' % bad; \
+	adj={r['storage']: r['peak_adj_bytes'] for r in rows \
+	     if r['system'] == 'rads-sim'}; \
+	print('bench-smoke: %d result rows, storage counts agree; ' \
+	'adj bytes dense %d vs bucketed %d; sync %.0fus async %.0fus (async<=sync: %s)' \
+	% (len(d['results']), adj.get('dense', -1), adj.get('bucketed', -1), \
+	t['sync_us'], t['async_us'], t['async_leq_sync']))"

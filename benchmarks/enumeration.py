@@ -3,11 +3,21 @@ TwinTwig vs SEED vs Crystal-lite. Metrics: wall time, communication volume
 (RADS: fetchV+verifyE bytes; baselines: shuffled intermediate bytes — the
 paper's headline axis), and peak intermediate rows (memory robustness).
 
+RADS cells are timed twice through a shared ``runner_cache``: the first
+(cold) call pays stage compilation, the second reuses the jitted stages —
+so every row reports ``compile_us`` and steady-state ``wall_us``
+*separately* (the old single-shot numbers were compile-dominated).  Each
+RADS cell also runs under both on-device storage formats (``dense`` vs
+``bucketed``) with the resident adjacency footprint in the
+``peak_adj_bytes`` column; a count divergence between formats aborts the
+benchmark (and thereby ``make bench-smoke`` / CI).
+
 Besides the ``common.emit`` CSV lines, the run writes a machine-readable
 ``BENCH_enumeration.json`` with two sections:
 
-* ``results``      — patterns × systems/backends: wall time, match count,
-  comm bytes (the perf-trajectory payload);
+* ``results``      — patterns × systems/backends × storage formats:
+  ``compile_us``/``wall_us``, match count, comm bytes, ``peak_adj_bytes``
+  (the perf-trajectory payload);
 * ``sync_vs_async`` — the staged scheduler timed on the *same warm jitted
   stages* with ``depth=1`` (the old synchronous wave loop) vs
   ``depth=2`` (double-buffered pipeline, lazy Algorithm-3 grouping and
@@ -24,6 +34,8 @@ import time
 
 import numpy as np
 
+import dataclasses
+
 from benchmarks.common import emit
 from repro.configs.rads import DEFAULT_ENGINE, EngineConfig, QUERIES
 from repro.core import (GroupQueue, Pattern, PipelineScheduler, StageRunner,
@@ -31,9 +43,11 @@ from repro.core import (GroupQueue, Pattern, PipelineScheduler, StageRunner,
                         rads_enumerate)
 from repro.core.baselines import (build_triangle_index, crystal_lite,
                                   join_enumerate, psgl_enumerate)
-from repro.core.engine import build_plan_data, graph_device_arrays
+from repro.core.engine import build_plan_data
 from repro.core.exchange import Exchange
-from repro.graph import load_dataset, partition
+from repro.graph import device_graph, load_dataset, partition
+
+STORAGE_FORMATS = ("dense", "bucketed")
 
 CFG = EngineConfig(frontier_cap=1 << 13, fetch_cap=1 << 10, verify_cap=1 << 12,
                    region_group_budget=1 << 12)
@@ -54,8 +68,8 @@ def _bench_sync_vs_async(pg, pat, backend: str, ndev: int) -> dict:
     """Time depth=1 vs depth=2 on shared warm jitted stages (min over
     paired reps; each rep re-runs lazy grouping + per-wave extraction)."""
     pd = build_plan_data(best_plan(pat))
-    adj, deg, meta = graph_device_arrays(pg)
-    runner = StageRunner(adj, deg, meta, pd, ASYNC_CFG, Exchange(backend))
+    runner = StageRunner(device_graph(pg, "dense"), pd, ASYNC_CFG,
+                         Exchange(backend))
 
     def make_queues():
         qs = []
@@ -123,32 +137,61 @@ def run(datasets=("dblp_bench", "roadnet_bench", "livejournal_bench",
         qs = queries if ds in ("dblp_bench", "roadnet_bench") else ("q1",)
         for q in qs:
             pat = Pattern.from_edges(QUERIES[q])
-            t0 = time.perf_counter()
-            r = rads_enumerate(pg, pat, CFG, mode="sim",
-                               return_embeddings=False)
-            t_rads = (time.perf_counter() - t0) * 1e6
-            rads_bytes = r.stats["bytes_fetch"] + r.stats["bytes_verify"]
-            emit(f"enum/{ds}/{q}/rads", t_rads,
-                 f"count={r.count};comm_bytes={rads_bytes:.0f};"
-                 f"sme={r.stats['n_sme_seeds']}")
-            out["results"].append(dict(
-                dataset=ds, query=q, system="rads-sim", wall_us=t_rads,
-                count=int(r.count), comm_bytes=float(rads_bytes),
-                bytes_fetch=float(r.stats["bytes_fetch"]),
-                bytes_verify=float(r.stats["bytes_verify"]),
-                n_waves=int(r.stats["n_waves"]),
-                max_inflight_waves=int(r.stats["max_inflight_waves"])))
-            counts = {r.count}
-            if smoke:   # keep the patterns x backends axis in the subset
+            counts: set[int] = set()
+            # sim backend × both storage formats; a shared runner_cache makes
+            # the second call reuse the jitted stages, so the warm run times
+            # steady-state execution and compile_us is the cold-warm delta
+            for fmt in STORAGE_FORMATS:
+                cfg_fmt = dataclasses.replace(CFG, storage_format=fmt)
+                cache: dict = {}
                 t0 = time.perf_counter()
-                rg = rads_enumerate(pg, pat, CFG, mode="gather",
-                                    return_embeddings=False)
+                r = rads_enumerate(pg, pat, cfg_fmt, mode="sim",
+                                   return_embeddings=False,
+                                   runner_cache=cache)
+                cold_us = (time.perf_counter() - t0) * 1e6
+                t0 = time.perf_counter()
+                r = rads_enumerate(pg, pat, cfg_fmt, mode="sim",
+                                   return_embeddings=False,
+                                   runner_cache=cache)
+                wall_us = (time.perf_counter() - t0) * 1e6
+                compile_us = max(cold_us - wall_us, 0.0)
+                rads_bytes = r.stats["bytes_fetch"] + r.stats["bytes_verify"]
+                emit(f"enum/{ds}/{q}/rads-{fmt}", wall_us,
+                     f"count={r.count};comm_bytes={rads_bytes:.0f};"
+                     f"compile_us={compile_us:.0f};"
+                     f"peak_adj_bytes={r.stats['peak_adj_bytes']};"
+                     f"sme={r.stats['n_sme_seeds']}")
+                out["results"].append(dict(
+                    dataset=ds, query=q, system="rads-sim", storage=fmt,
+                    wall_us=wall_us, compile_us=compile_us,
+                    count=int(r.count), comm_bytes=float(rads_bytes),
+                    bytes_fetch=float(r.stats["bytes_fetch"]),
+                    bytes_verify=float(r.stats["bytes_verify"]),
+                    peak_adj_bytes=int(r.stats["peak_adj_bytes"]),
+                    n_waves=int(r.stats["n_waves"]),
+                    max_inflight_waves=int(r.stats["max_inflight_waves"])))
+                counts.add(r.count)
+            if smoke:   # keep the patterns x backends axis in the subset
+                cfg_g = dataclasses.replace(CFG, storage_format="bucketed")
+                cache = {}
+                t0 = time.perf_counter()
+                rg = rads_enumerate(pg, pat, cfg_g, mode="gather",
+                                    return_embeddings=False,
+                                    runner_cache=cache)
+                cold_us = (time.perf_counter() - t0) * 1e6
+                t0 = time.perf_counter()
+                rg = rads_enumerate(pg, pat, cfg_g, mode="gather",
+                                    return_embeddings=False,
+                                    runner_cache=cache)
                 t_g = (time.perf_counter() - t0) * 1e6
                 g_bytes = rg.stats["bytes_fetch"] + rg.stats["bytes_verify"]
-                emit(f"enum/{ds}/{q}/rads-gather", t_g,
+                emit(f"enum/{ds}/{q}/rads-gather-bucketed", t_g,
                      f"count={rg.count};comm_bytes={g_bytes:.0f}")
                 out["results"].append(dict(
-                    dataset=ds, query=q, system="rads-gather", wall_us=t_g,
+                    dataset=ds, query=q, system="rads-gather",
+                    storage="bucketed", wall_us=t_g,
+                    compile_us=max(cold_us - t_g, 0.0),
+                    peak_adj_bytes=int(rg.stats["peak_adj_bytes"]),
                     count=int(rg.count), comm_bytes=float(g_bytes)))
                 counts.add(rg.count)
             if not smoke:

@@ -24,11 +24,20 @@ class EngineConfig:
     enable_work_stealing: bool = True  # checkR/shareR analogue (seed rebalance)
     plan_rho: float = 1.0              # score-function exponent (paper uses 1)
     seed: int = 0
+    # --- on-device adjacency storage (graph/storage.py DeviceGraph) --------- #
+    storage_format: str = "dense"      # 'dense' (reference) | 'bucketed'
+                                       # (degree-bucketed CSR slabs, decouples
+                                       # adjacency memory from the worst hub)
     # --- async wave scheduler (core/scheduler.py) --------------------------- #
-    pipeline_depth: int = 2            # max in-flight waves (1 = synchronous)
+    pipeline_depth: int | str = 2      # max in-flight waves (1 = synchronous,
+                                       # "auto" = adapt from per-wave timing)
     steal_from_longest: bool = True    # refill drained group queues (checkR/shareR)
+    # --- cross-run priors (core/priors.py) ---------------------------------- #
+    priors_path: str = ""              # JSON cache of per-(pattern, graph)
+                                       # capacity/cost priors ("" = disabled)
     # --- accelerator kernels ------------------------------------------------ #
-    use_pallas_kernels: bool = False   # Pallas membership in back-edge checks
+    use_pallas_kernels: bool = False   # Pallas membership in back-edge checks +
+                                       # intersect in bucketed candidate gen
                                        # (off on CPU: jnp reference is the test path)
 
 

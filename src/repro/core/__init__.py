@@ -6,12 +6,12 @@ from repro.core.plan import (Plan, Unit, best_plan, enumerate_plans,
                              random_star_plan, min_rounds_unscored_plan,
                              compute_matching_order)
 from repro.core.engine import (PlanData, build_plan_data, run_rounds,
-                               graph_device_arrays, GraphMeta, WaveState,
-                               init_wave, fetch_stage, expand_stage,
-                               verify_stage, finalize_wave)
+                               WaveState, init_wave, fetch_stage,
+                               expand_stage, verify_stage, finalize_wave)
 from repro.core.scheduler import GroupQueue, PipelineScheduler, StageRunner
 from repro.core.driver import (rads_enumerate, EnumerationResult,
                                extract_embeddings)
+from repro.core.priors import load_priors, priors_key, save_priors
 from repro.core.oracle import enumerate_oracle, count_oracle, canonicalize
 from repro.core.trie import EmbeddingTrie, compression_report
 from repro.core.region import (iter_region_groups, make_region_groups,
@@ -24,8 +24,9 @@ __all__ = [
     "Pattern", "Plan", "Unit", "best_plan", "enumerate_plans", "minimum_cds",
     "bfs_fallback_plan", "random_star_plan", "min_rounds_unscored_plan",
     "compute_matching_order", "PlanData", "build_plan_data", "run_rounds",
-    "graph_device_arrays", "GraphMeta", "WaveState", "init_wave",
+    "WaveState", "init_wave",
     "fetch_stage", "expand_stage", "verify_stage", "finalize_wave",
+    "load_priors", "priors_key", "save_priors",
     "GroupQueue", "PipelineScheduler", "StageRunner",
     "iter_region_groups",
     "rads_enumerate", "EnumerationResult", "extract_embeddings",

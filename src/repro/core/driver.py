@@ -8,26 +8,30 @@ double-buffered async pipeline — lives in :mod:`repro.core.scheduler`;
 this module only
 
 * classifies seeds (SM-E vs distributed, Prop. 1),
+* exports the partition in the configured on-device storage format
+  (``EngineConfig.storage_format`` -> :func:`repro.graph.storage.device_graph`),
+* preloads / persists the per-(pattern, graph) capacity & cost priors
+  (:mod:`repro.core.priors`) so repeat runs skip the escalate/re-jit ladder,
 * builds the per-device region-group queues (§6, Algorithm 3),
 * launches the two scheduler phases, and
 * assembles the :class:`EnumerationResult` (counts, embeddings, stats).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 
-import jax
 import numpy as np
 
 from repro.configs.rads import DEFAULT_ENGINE, EngineConfig
-from repro.core.engine import (PlanData, build_plan_data,
-                               graph_device_arrays)
+from repro.core.engine import PlanData, build_plan_data
 from repro.core.exchange import Exchange
 from repro.core.plan import Plan, best_plan
+from repro.core.priors import load_priors, priors_key, save_priors
 from repro.core.query import Pattern
 from repro.core.region import iter_region_groups
 from repro.core.scheduler import GroupQueue, PipelineScheduler, StageRunner
-from repro.graph.storage import PartitionedGraph
+from repro.graph.storage import PartitionedGraph, device_graph
 
 
 @dataclass
@@ -53,19 +57,51 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
                    cfg: EngineConfig = DEFAULT_ENGINE,
                    mode: str = "sim", mesh=None,
                    plan: Plan | None = None,
-                   return_embeddings: bool = True) -> EnumerationResult:
+                   return_embeddings: bool = True,
+                   runner_cache: dict | None = None) -> EnumerationResult:
     """``mode`` selects a registered exchange backend: 'sim' (reference),
     'gather' (device-local, meshless), 'spmd' (sharded production path —
-    requires ``mesh``)."""
+    requires ``mesh``); ``cfg.storage_format`` selects the on-device
+    adjacency layout ('dense' | 'bucketed').
+
+    ``runner_cache``: optional dict the caller owns.  Repeat calls with the
+    same (graph, pattern, mode, cfg) reuse the jitted :class:`StageRunner`
+    from the cache, so only the first call pays stage compilation —
+    benchmarks use this to split ``compile_us`` from steady-state
+    ``wall_us``.
+    """
+    explicit_plan = plan
     plan = plan or best_plan(pattern, cfg.plan_rho)
     pd = build_plan_data(plan)
-    adj, deg, meta = graph_device_arrays(pg)
-    exch = Exchange(mode=mode, mesh=mesh)
-    if mode == "spmd":
-        from jax.sharding import NamedSharding, PartitionSpec as P
-        adj = jax.device_put(adj, NamedSharding(mesh, P("data", None, None)))
-        deg = jax.device_put(deg, NamedSharding(mesh, P("data", None)))
-    runner = StageRunner(adj, deg, meta, pd, cfg, exch)
+
+    # ---- capacity / cost priors (persisted §6 calibration) ---------------- #
+    pkey = priors_key(pattern, pg) if cfg.priors_path else None
+    prior = load_priors(cfg.priors_path).get(pkey) if pkey else None
+    if prior:
+        caps = prior.get("caps", {})
+        cfg = dataclasses.replace(
+            cfg,
+            frontier_cap=max(cfg.frontier_cap, int(caps.get("frontier", 0))),
+            fetch_cap=max(cfg.fetch_cap, int(caps.get("fetch", 0))),
+            verify_cap=max(cfg.verify_cap, int(caps.get("verify", 0))))
+
+    ck = None
+    runner = None
+    if runner_cache is not None:
+        # the cached entry pins pg (and the plan), so the id()s can never be
+        # recycled onto a different graph while the cache is alive; the mesh
+        # participates directly (jax.sharding.Mesh hashes by content)
+        ck = (mode, id(pg), pattern, cfg, mesh,
+              id(explicit_plan) if explicit_plan is not None else None)
+        hit = runner_cache.get(ck)
+        runner = hit[-1] if hit is not None else None
+    if runner is None:
+        g = device_graph(pg, cfg.storage_format)
+        if mode == "spmd":
+            g = g.shard(mesh)
+        runner = StageRunner(g, pd, cfg, Exchange(mode=mode, mesh=mesh))
+        if ck is not None:
+            runner_cache[ck] = (pg, explicit_plan, runner)
 
     # ---- candidate seeds per device: deg(v) >= deg(u_start) --------------- #
     ndev, stride = pg.ndev, pg.stride
@@ -89,7 +125,10 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
                  plan_rounds=plan.n_rounds,
                  sme_count=0, dist_count=0,
                  n_waves=0, max_inflight_waves=0, steal_events=0,
-                 wave_s_total=0.0, pipeline_depth=cfg.pipeline_depth)
+                 wave_s_total=0.0, pipeline_depth=cfg.pipeline_depth,
+                 storage_format=cfg.storage_format,
+                 peak_adj_bytes=int(runner.g.adj_bytes),
+                 priors_preloaded=bool(prior))
     total = 0
     embs: set[tuple[int, ...]] = set()
 
@@ -108,6 +147,8 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
 
     # ---- SM-E phase ------------------------------------------------------- #
     per_seed_cost = 4.0 * pattern.n
+    if prior and prior.get("per_seed_cost"):
+        per_seed_cost = max(float(prior["per_seed_cost"]), 1.0)
     max_sme = max((len(s) for s in sme_seeds), default=0)
     if max_sme > 0:
         scap = 1 << (min(max_sme, 4096) - 1).bit_length()
@@ -143,12 +184,18 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
         max_g = int(float(cfg.region_group_budget) // max(per_seed_cost, 1.0))
         max_g = max(1, min(max_g + 1, max(len(s) for s in dist_seeds)))
         scap = 1 << (max_g - 1).bit_length()
-        sched.run(queues, scap, local_only=False, phase="dist")
+        c = sched.run(queues, scap, local_only=False, phase="dist")
+        if c is not None:
+            per_seed_cost = max(c, 1.0)
         stats["n_groups"] = max(q.n_formed for q in queues)
 
     stats["final_caps"] = dict(frontier=runner.cfg.frontier_cap,
                                fetch=runner.cfg.fetch_cap,
                                verify=runner.cfg.verify_cap)
+    if pkey:
+        save_priors(cfg.priors_path, pkey,
+                    dict(per_seed_cost=float(per_seed_cost),
+                         caps=stats["final_caps"]))
     return EnumerationResult(count=total,
                              embeddings=embs if return_embeddings else None,
                              stats=stats)

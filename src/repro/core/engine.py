@@ -30,10 +30,21 @@ region-group waves (double-buffered exchanges).  :func:`run_rounds` remains
 as the synchronous composition of the stages; stage boundaries carry no
 semantics, so ``run_rounds == staged pipeline`` byte-for-byte.
 
-Membership tests (back-edge checks in ``_leaf_step`` and the ``verifyE``
-answer path) route through :mod:`repro.kernels.membership.ops`, which lowers
-to the Pallas TPU kernel when ``EngineConfig.use_pallas_kernels`` is set and
-to the jnp reference otherwise (the CPU test path).
+The engine reads adjacency exclusively through the pluggable
+:class:`~repro.graph.storage.DeviceGraph` interface (``rows_at``/``deg_at``
+over the stacked layout): the ``dense`` format is the seed's padded array,
+``bucketed`` stores degree-bucketed CSR slabs — both produce byte-identical
+results because ``rows_at`` reassembles the same sentinel-padded windows.
+
+Accelerator kernels (gated by ``EngineConfig.use_pallas_kernels``, jnp refs
+as the CPU test path):
+
+* membership tests (back-edge checks in ``_leaf_step`` on the dense layout
+  and the ``verifyE`` answer path) route through
+  :mod:`repro.kernels.membership.ops`;
+* candidate generation on the **bucketed** layout routes the back-edge
+  refinement ``C(u) ∩ adj(f(u'))`` (Alg. 1 line 6) through
+  :mod:`repro.kernels.intersect.ops` instead.
 """
 from __future__ import annotations
 
@@ -47,7 +58,8 @@ from repro.configs.rads import EngineConfig
 from repro.core.exchange import (ExchangeBackend, compact,
                                  unique_ids, unique_pairs)
 from repro.core.plan import Plan
-from repro.graph.storage import PartitionedGraph
+from repro.graph.storage import DeviceGraph
+from repro.kernels.intersect.ops import intersect as _intersect_op
 from repro.kernels.membership.ops import membership as _membership_op
 
 
@@ -59,6 +71,25 @@ def _membership(rows: jnp.ndarray, vals: jnp.ndarray,
     ``True`` runs the Pallas kernel (interpreted off-TPU)."""
     return _membership_op(rows, vals, use_kernel=use_pallas,
                           interpret=jax.default_backend() != "tpu")
+
+
+def _backedge_mask(g: DeviceGraph, w_row: jnp.ndarray, cand: jnp.ndarray,
+                   cfg: EngineConfig) -> jnp.ndarray:
+    """Candidate-generation back-edge filter: is cand[r, j] in w_row[r]?
+
+    Formats with ``intersect_backedge`` (the bucketed layout) route the
+    sorted-window intersection ``C(u) ∩ adj(f(u'))`` through the Pallas
+    ``intersect`` kernel (jnp ref off-kernel); the rest keep the
+    ``membership`` lowering (the bit-exact seed path).  The two differ only
+    where ``cand == sentinel`` — positions the caller has already
+    invalidated — so the final masks are identical.
+    """
+    if g.intersect_backedge:
+        mask, _ = _intersect_op(cand, w_row, sentinel=g.n,
+                                use_kernel=cfg.use_pallas_kernels,
+                                interpret=jax.default_backend() != "tpu")
+        return mask
+    return _membership(w_row, cand, cfg.use_pallas_kernels)
 
 
 # --------------------------------------------------------------------------- #
@@ -124,23 +155,6 @@ def build_plan_data(plan: Plan) -> PlanData:
 
 
 # --------------------------------------------------------------------------- #
-# Device graph data
-# --------------------------------------------------------------------------- #
-@dataclass(frozen=True)
-class GraphMeta:
-    ndev: int
-    stride: int
-    n: int            # sentinel == n
-    max_degree: int
-
-
-def graph_device_arrays(pg: PartitionedGraph):
-    meta = GraphMeta(ndev=pg.ndev, stride=pg.stride, n=pg.n,
-                     max_degree=pg.max_degree)
-    return jnp.asarray(pg.adj), jnp.asarray(pg.deg), meta
-
-
-# --------------------------------------------------------------------------- #
 # fetchV / verifyE exchanges
 # --------------------------------------------------------------------------- #
 def _per_peer_compact(ids, mask, owners, ndev: int, cap_out: int, fill: int):
@@ -155,14 +169,14 @@ def _per_peer_compact(ids, mask, owners, ndev: int, cap_out: int, fill: int):
     return reqs, counts, jnp.any(ovs)
 
 
-def fetch_exchange(adj, meta: GraphMeta, exch: ExchangeBackend,
+def fetch_exchange(g: DeviceGraph, exch: ExchangeBackend,
                    pivots, need, fcap: int):
     """Batched fetchV (§3.2 Expand): dedup foreign pivot ids, exchange,
     answer with local adjacency rows, exchange back.
 
     pivots/need: (ndev, cap). Returns (req_ids (ndev, ndev, fcap) sorted per
     peer, fetched_adj (ndev, ndev, fcap, maxdeg), overflow, off_bytes)."""
-    ndev, stride, n = meta.ndev, meta.stride, meta.n
+    ndev, stride, n = g.ndev, g.stride, g.n
     t_ids = jnp.arange(ndev)
 
     def build(t, pv, nd):
@@ -177,21 +191,21 @@ def fetch_exchange(adj, meta: GraphMeta, exch: ExchangeBackend,
     def answer(t, rc):
         li = jnp.clip(rc - t * stride, 0, stride - 1)
         ok = (rc // stride == t) & (rc < n)
-        return jnp.where(ok[..., None], adj[t][li], n)
+        return jnp.where(ok[..., None], g.rows_at(t, li), n)
 
     resp = jax.vmap(answer)(t_ids, recv)               # (ndev, src, fcap, D)
     fetched = exch.a2a(resp)                           # (ndev, peer, fcap, D)
     # 4B request id + 4B * max_degree response row per off-device entry
-    off_bytes = exch.off_device_bytes(counts, 4 * (1 + meta.max_degree))
+    off_bytes = exch.off_device_bytes(counts, 4 * (1 + g.max_degree))
     return reqs, fetched, jnp.any(ov), off_bytes
 
 
-def verify_exchange(adj, meta: GraphMeta, exch: ExchangeBackend,
+def verify_exchange(g: DeviceGraph, exch: ExchangeBackend,
                     pa, pb, pmask, vcap: int, use_pallas: bool = False):
     """Batched verifyE over the EVI (§3.2). pa/pb/pmask: (ndev, R, K).
     Pairs routed to owner(pa). Returns (ok (ndev, R, K) — True where the
     edge exists or the slot is inactive, overflow, off_bytes)."""
-    ndev, stride, n = meta.ndev, meta.stride, meta.n
+    ndev, stride, n = g.ndev, g.stride, g.n
     R, K = pa.shape[1], pa.shape[2]
     fa, fb, fm = (x.reshape(ndev, R * K) for x in (pa, pb, pmask))
 
@@ -215,7 +229,7 @@ def verify_exchange(adj, meta: GraphMeta, exch: ExchangeBackend,
     def answer(t, ra, rb):
         li = jnp.clip(ra - t * stride, 0, stride - 1)
         local_ok = (ra // stride == t) & (ra < n)
-        rows = adj[t][li]                              # (src, vcap, D)
+        rows = g.rows_at(t, li)                        # (src, vcap, D)
         D = rows.shape[-1]
         memb = _membership(rows.reshape(-1, D), rb.reshape(-1, 1),
                            use_pallas).reshape(rb.shape)
@@ -239,23 +253,23 @@ def verify_exchange(adj, meta: GraphMeta, exch: ExchangeBackend,
 # --------------------------------------------------------------------------- #
 # Leaf expansion
 # --------------------------------------------------------------------------- #
-def _leaf_step(adj, deg, meta: GraphMeta, cfg: EngineConfig, spec: StepSpec,
+def _leaf_step(g: DeviceGraph, cfg: EngineConfig, spec: StepSpec,
                k_off: int, rows, alive, seed_slot,
                pend_a, pend_b, pend_m, req_ids, fetched, local_only: bool):
     """Expand one leaf: candidates = adj(pivot); filter (injectivity,
-    symmetry, degree, local membership — Alg. 1+2); compact to frontier_cap;
-    record undetermined edges into the pending (EVI) buffers."""
-    ndev, stride, n, D = meta.ndev, meta.stride, meta.n, meta.max_degree
+    symmetry, degree, local back-edge intersection — Alg. 1+2); compact to
+    frontier_cap; record undetermined edges into the pending (EVI) buffers.
+    Adjacency is read through the format-agnostic ``DeviceGraph``."""
+    ndev, stride, n, D = g.ndev, g.stride, g.n, g.max_degree
     cap = cfg.frontier_cap
     t_ids = jnp.arange(ndev)
 
     def dev(t, rws, alv, sslot, pa, pb, pm, rq, ft):
         R, w = rws.shape
-        adj_t, deg_t = adj[t], deg[t]
         pv = rws[:, spec.piv_col]
         is_local = (pv // stride == t) & (pv < n)
         li = jnp.clip(pv - t * stride, 0, stride - 1)
-        lrow = adj_t[li]                                   # (R, D)
+        lrow = g.rows_at(t, li)                            # (R, D)
         if local_only:
             prow = jnp.where(is_local[:, None], lrow, n)
             lost = jnp.zeros((), bool)
@@ -280,16 +294,15 @@ def _leaf_step(adj, deg, meta: GraphMeta, cfg: EngineConfig, spec: StepSpec,
             valid &= cand < rws[:, c][:, None]
         c_local = (cand // stride == t) & (cand < n)
         c_li = jnp.clip(cand - t * stride, 0, stride - 1)
-        valid &= jnp.where(c_local, deg_t[c_li] >= spec.leaf_deg, True)
+        valid &= jnp.where(c_local, g.deg_at(t, c_li) >= spec.leaf_deg, True)
         if local_only:
             valid &= c_local                               # Prop. 1 pruning
         for c in spec.back_cols:       # local checks (Alg 2 lines 3-5, 8-11)
             wv = rws[:, c]
             w_loc = (wv // stride == t) & (wv < n)
-            w_row = adj_t[jnp.clip(wv - t * stride, 0, stride - 1)]
+            w_row = g.rows_at(t, jnp.clip(wv - t * stride, 0, stride - 1))
             valid &= jnp.where(
-                w_loc[:, None],
-                _membership(w_row, cand, cfg.use_pallas_kernels), True)
+                w_loc[:, None], _backedge_mask(g, w_row, cand, cfg), True)
 
         # compact (R*D) -> cap
         parent = jnp.repeat(jnp.arange(R, dtype=jnp.int32), D)
@@ -370,9 +383,9 @@ class WaveState:
         return cls(*children)
 
 
-def init_wave(meta: GraphMeta, seeds, seed_mask) -> WaveState:
+def init_wave(g: DeviceGraph, seeds, seed_mask) -> WaveState:
     """Stage 0: lift a padded (ndev, scap) seed block into a WaveState."""
-    ndev = meta.ndev
+    ndev = g.ndev
     scap = seeds.shape[1]
     return WaveState(
         rows=seeds[..., None].astype(jnp.int32),
@@ -391,7 +404,7 @@ def unit_evi_width(pd: PlanData, ui: int) -> int:
     return sum(len(pd.steps[s].back_cols) for s in pd.unit_steps[ui])
 
 
-def fetch_stage(adj, meta: GraphMeta, pd: PlanData, cfg: EngineConfig,
+def fetch_stage(g: DeviceGraph, pd: PlanData, cfg: EngineConfig,
                 exch: ExchangeBackend, ui: int, state: WaveState,
                 local_only: bool):
     """Pipeline stage 1 of unit ``ui``: batched fetchV on the unit pivot.
@@ -402,14 +415,14 @@ def fetch_stage(adj, meta: GraphMeta, pd: PlanData, cfg: EngineConfig,
         return state, None
     piv_col = pd.unit_piv_cols[ui]
     req_ids, fetched, f_ov, f_b = fetch_exchange(
-        adj, meta, exch, state.rows[:, :, piv_col], state.alive,
+        g, exch, state.rows[:, :, piv_col], state.alive,
         cfg.fetch_cap)
     state = replace(state, overflow=state.overflow | f_ov,
                     bytes_fetch=state.bytes_fetch + f_b)
     return state, (req_ids, fetched)
 
 
-def expand_stage(adj, deg, meta: GraphMeta, pd: PlanData, cfg: EngineConfig,
+def expand_stage(g: DeviceGraph, pd: PlanData, cfg: EngineConfig,
                  ui: int, state: WaveState, bufs, local_only: bool
                  ) -> WaveState:
     """Pipeline stage 2 of unit ``ui``: every leaf step of the unit —
@@ -421,15 +434,15 @@ def expand_stage(adj, deg, meta: GraphMeta, pd: PlanData, cfg: EngineConfig,
     K = max(unit_evi_width(pd, ui), 1)
     rows, alive, seed_slot = state.rows, state.alive, state.seed_slot
     overflow, lost, node_counts = state.overflow, state.lost, state.node_counts
-    pend_a = jnp.full((meta.ndev, rows.shape[1], K), meta.n, jnp.int32)
-    pend_b = jnp.full((meta.ndev, rows.shape[1], K), meta.n, jnp.int32)
-    pend_m = jnp.zeros((meta.ndev, rows.shape[1], K), bool)
+    pend_a = jnp.full((g.ndev, rows.shape[1], K), g.n, jnp.int32)
+    pend_b = jnp.full((g.ndev, rows.shape[1], K), g.n, jnp.int32)
+    pend_m = jnp.zeros((g.ndev, rows.shape[1], K), bool)
     req_ids, fetched = bufs if bufs is not None else (None, None)
     k_off = 0
     for sid in step_ids:
         spec = pd.steps[sid]
         (rows, alive, seed_slot, pend_a, pend_b, pend_m, ov_s, lost_s
-         ) = _leaf_step(adj, deg, meta, cfg, spec, k_off,
+         ) = _leaf_step(g, cfg, spec, k_off,
                         rows, alive, seed_slot, pend_a, pend_b, pend_m,
                         req_ids, fetched, local_only)
         overflow |= ov_s
@@ -445,7 +458,7 @@ def expand_stage(adj, deg, meta: GraphMeta, pd: PlanData, cfg: EngineConfig,
                    pend_a=pend_a, pend_b=pend_b, pend_m=pend_m)
 
 
-def verify_stage(adj, meta: GraphMeta, pd: PlanData, cfg: EngineConfig,
+def verify_stage(g: DeviceGraph, pd: PlanData, cfg: EngineConfig,
                  exch: ExchangeBackend, ui: int, state: WaveState,
                  local_only: bool) -> WaveState:
     """Pipeline stage 3 of unit ``ui``: batched verifyE over the EVI, then
@@ -455,7 +468,7 @@ def verify_stage(adj, meta: GraphMeta, pd: PlanData, cfg: EngineConfig,
     overflow, bytes_verify = state.overflow, state.bytes_verify
     if (not local_only) and unit_evi_width(pd, ui) > 0:
         ok, v_ov, v_b = verify_exchange(
-            adj, meta, exch, state.pend_a, state.pend_b, state.pend_m,
+            g, exch, state.pend_a, state.pend_b, state.pend_m,
             cfg.verify_cap, use_pallas=cfg.use_pallas_kernels)
         alive = alive & jnp.all(ok, axis=-1)
         overflow = overflow | v_ov
@@ -481,18 +494,16 @@ def finalize_wave(state: WaveState):
 # --------------------------------------------------------------------------- #
 # Full multi-round run (synchronous composition of the stages)
 # --------------------------------------------------------------------------- #
-def run_rounds(adj, deg, meta: GraphMeta, pd: PlanData, cfg: EngineConfig,
+def run_rounds(g: DeviceGraph, pd: PlanData, cfg: EngineConfig,
                exch: ExchangeBackend, seeds, seed_mask, local_only: bool):
     """Traceable core: all units, all leaves, exchanges per round.
 
     seeds: (ndev, scap) global vertex ids.  Returns (rows, alive, counts,
     complete, stats).  This is exactly ``fetch→expand→verify`` per unit —
     the async scheduler runs the same stages, interleaved across waves."""
-    state = init_wave(meta, seeds, seed_mask)
+    state = init_wave(g, seeds, seed_mask)
     for ui in range(len(pd.unit_steps)):
-        state, bufs = fetch_stage(adj, meta, pd, cfg, exch, ui, state,
-                                  local_only)
-        state = expand_stage(adj, deg, meta, pd, cfg, ui, state, bufs,
-                             local_only)
-        state = verify_stage(adj, meta, pd, cfg, exch, ui, state, local_only)
+        state, bufs = fetch_stage(g, pd, cfg, exch, ui, state, local_only)
+        state = expand_stage(g, pd, cfg, ui, state, bufs, local_only)
+        state = verify_stage(g, pd, cfg, exch, ui, state, local_only)
     return finalize_wave(state)

@@ -1,0 +1,64 @@
+"""Cross-run capacity / cost priors (§6 calibration, persisted).
+
+The engine calibrates two things while it runs: the per-seed trie-node
+cost (the region-group budget denominator, running mean over every
+completed wave) and the static engine capacities (doubled on overflow —
+each escalation re-jits every stage mid-enumeration).  Both are pure
+functions of the (pattern, data graph) workload, so persisting them lets
+the *next* run on the same workload start with the right capacities —
+skipping the escalate/re-jit ladder entirely — and with a realistic
+per-seed cost for region-group sizing instead of the cold-start guess.
+
+The cache is a flat JSON file (``EngineConfig.priors_path``) mapping a
+workload key — canonical pattern edge list + graph fingerprint
+(vertices, edges, ndev) — to ``{"per_seed_cost": float, "caps": {...}}``.
+Writes are merge + atomic-rename under an advisory file lock so
+concurrent runs on different workloads can share one cache file.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core.query import Pattern
+from repro.graph.storage import PartitionedGraph
+
+
+def priors_key(pattern: Pattern, pg: PartitionedGraph) -> str:
+    """Workload fingerprint: canonical query edges + data-graph identity."""
+    edges = ";".join(f"{a}-{b}" for a, b in sorted(pattern.edges))
+    m = int(pg.deg.sum()) // 2
+    return f"q[{edges}]|g[n={pg.n_real},m={m},ndev={pg.ndev}]"
+
+
+def load_priors(path: str) -> dict:
+    """Read the cache; missing or corrupt files are an empty prior."""
+    try:
+        with open(path) as f:
+            out = json.load(f)
+        return out if isinstance(out, dict) else {}
+    except (OSError, json.JSONDecodeError):
+        return {}
+
+
+def save_priors(path: str, key: str, entry: dict) -> None:
+    """Merge ``entry`` under ``key`` and atomically rewrite the cache.
+
+    The read-merge-replace runs under an advisory ``flock`` on a sibling
+    lock file (where the platform has one), so concurrent runs finishing
+    at the same time don't drop each other's entries."""
+    lock = open(f"{path}.lock", "w")
+    try:
+        try:
+            import fcntl
+            fcntl.flock(lock, fcntl.LOCK_EX)
+        except (ImportError, OSError):
+            pass                     # no flock: fall back to atomic rename
+        cur = load_priors(path)
+        cur[key] = entry
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(cur, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    finally:
+        lock.close()

@@ -37,7 +37,11 @@ driver's ``run_batches``:
   *running mean over every completed wave* (not the last batch), feeding
   the region-group budget of the distributed phase;
 * **per-wave timing / byte stats** so benchmarks can report overlap
-  efficiency (``wave_s_total`` vs ``*_pipeline_s`` wall time).
+  efficiency (``wave_s_total`` vs ``*_pipeline_s`` wall time);
+* **adaptive pipeline depth** (``EngineConfig.pipeline_depth="auto"``):
+  the achieved concurrency ``Σ wave latency / wall`` steers the in-flight
+  limit up when the pipeline saturates and back down when waves stop
+  overlapping — a pure host-side scheduling decision, never a recompile.
 """
 from __future__ import annotations
 
@@ -50,12 +54,15 @@ import jax
 import numpy as np
 
 from repro.configs.rads import EngineConfig
-from repro.core.engine import (GraphMeta, PlanData, WaveState, expand_stage,
+from repro.core.engine import (PlanData, WaveState, expand_stage,
                                fetch_stage, finalize_wave, init_wave,
                                verify_stage)
 from repro.core.exchange import ExchangeBackend
+from repro.graph.storage import DeviceGraph
 
 _MAX_CAP = 1 << 22
+_AUTO_START_DEPTH = 2       # pipeline_depth="auto" begins double-buffered
+_MAX_AUTO_DEPTH = 8
 
 
 def _pad_seeds(seeds_per_dev: list[np.ndarray], ndev: int, scap: int,
@@ -124,13 +131,16 @@ class GroupQueue:
 # StageRunner: the jitted per-unit stage functions
 # --------------------------------------------------------------------------- #
 class StageRunner:
-    """Holds graph device arrays plus a lazily-built cache of jitted stage
-    functions keyed by ``(stage, unit, local_only)``; capacity escalation
-    doubles the engine caps and clears the cache (re-jit)."""
+    """Holds the on-device graph (any registered ``DeviceGraph`` format)
+    plus a lazily-built cache of jitted stage functions keyed by
+    ``(stage, unit, local_only)``; capacity escalation doubles the engine
+    caps and clears the cache (re-jit).  The graph travels through the
+    jitted stages as a pytree argument, so sharded (spmd) and device-local
+    formats use the same code path."""
 
-    def __init__(self, adj, deg, meta: GraphMeta, pd: PlanData,
+    def __init__(self, g: DeviceGraph, pd: PlanData,
                  cfg: EngineConfig, exch: ExchangeBackend):
-        self.adj, self.deg, self.meta = adj, deg, meta
+        self.g = g
         self.pd, self.exch = pd, exch
         self.cfg = cfg
         self._fns: dict = {}
@@ -158,32 +168,31 @@ class StageRunner:
         return fn
 
     def init(self, seeds: np.ndarray, mask: np.ndarray) -> WaveState:
-        meta = self.meta
         fn = self._get("init", lambda: jax.jit(
-            lambda s, m: init_wave(meta, s, m)))
-        return fn(seeds, mask)
+            lambda gg, s, m: init_wave(gg, s, m)))
+        return fn(self.g, seeds, mask)
 
     def fetch(self, ui: int, state: WaveState, local_only: bool):
         if local_only:                       # SM-E: no collectives at all
             return state, None
-        meta, pd, cfg, exch = self.meta, self.pd, self.cfg, self.exch
+        pd, cfg, exch = self.pd, self.cfg, self.exch
         fn = self._get(("fetch", ui), lambda: jax.jit(
-            lambda a, s: fetch_stage(a, meta, pd, cfg, exch, ui, s, False)))
-        return fn(self.adj, state)
+            lambda gg, s: fetch_stage(gg, pd, cfg, exch, ui, s, False)))
+        return fn(self.g, state)
 
     def expand(self, ui: int, state: WaveState, bufs, local_only: bool):
-        meta, pd, cfg = self.meta, self.pd, self.cfg
+        pd, cfg = self.pd, self.cfg
         fn = self._get(("expand", ui, local_only), lambda: jax.jit(
-            lambda a, d, s, b: expand_stage(a, d, meta, pd, cfg, ui, s, b,
-                                            local_only)))
-        return fn(self.adj, self.deg, state, bufs)
+            lambda gg, s, b: expand_stage(gg, pd, cfg, ui, s, b,
+                                          local_only)))
+        return fn(self.g, state, bufs)
 
     def verify(self, ui: int, state: WaveState, local_only: bool):
-        meta, pd, cfg, exch = self.meta, self.pd, self.cfg, self.exch
+        pd, cfg, exch = self.pd, self.cfg, self.exch
         fn = self._get(("verify", ui, local_only), lambda: jax.jit(
-            lambda a, s: verify_stage(a, meta, pd, cfg, exch, ui, s,
-                                      local_only)))
-        return fn(self.adj, state)
+            lambda gg, s: verify_stage(gg, pd, cfg, exch, ui, s,
+                                       local_only)))
+        return fn(self.g, state)
 
 
 # --------------------------------------------------------------------------- #
@@ -250,8 +259,8 @@ class PipelineScheduler:
             return wave
 
     def _admit(self, wave: list[np.ndarray], scap: int) -> _Wave:
-        meta = self.runner.meta
-        seeds, mask = _pad_seeds(wave, meta.ndev, scap, meta.n)
+        g = self.runner.g
+        seeds, mask = _pad_seeds(wave, g.ndev, scap, g.n)
         state = self.runner.init(seeds, mask)
         stages = [(kind, ui) for ui in range(self.runner.n_units)
                   for kind in ("fetch", "expand", "verify")]
@@ -292,7 +301,7 @@ class PipelineScheduler:
 
     # -- main loop ----------------------------------------------------------- #
     def run(self, queues, scap: int,
-            local_only: bool, phase: str, depth: int | None = None
+            local_only: bool, phase: str, depth=None
             ) -> float | None:
         """Process per-device group queues (GroupQueue instances or plain
         lists of seed arrays) until empty.  Returns the mean trie-node cost
@@ -300,15 +309,25 @@ class PipelineScheduler:
 
         ``depth`` overrides ``cfg.pipeline_depth`` — it is a host-side
         scheduling knob only (no recompilation), which lets benchmarks time
-        sync (1) vs async (>=2) on the same warm jitted stages."""
+        sync (1) vs async (>=2) on the same warm jitted stages.
+
+        ``pipeline_depth="auto"`` (or ``depth="auto"``) picks the depth from
+        the per-wave timing stats the scheduler already collects: the ratio
+        ``Σ wave latency / pipeline wall`` is the concurrency the pipeline
+        *achieved*.  When it saturates the current depth the limit rises
+        (up to ``_MAX_AUTO_DEPTH``); when waves stop overlapping (uniform
+        runtimes, single surviving queue) it falls back toward synchronous —
+        all host-side, so adaptation never recompiles a stage."""
         if depth is None:
             depth = self.runner.cfg.pipeline_depth
-        depth = max(1, int(depth))
+        auto = depth == "auto"               # the "auto" setting
+        depth = _AUTO_START_DEPTH if auto else max(1, int(depth))
         queues = [q if isinstance(q, GroupQueue) else GroupQueue(q)
                   for q in queues]
         retry: list[list[np.ndarray]] = []
         inflight: deque[_Wave] = deque()
         cost_sum, cost_n = 0.0, 0
+        waves_done, wave_s_phase = 0, 0.0
         t0 = time.perf_counter()
         while True:
             # 1. advance every in-flight wave one stage, oldest first — this
@@ -340,9 +359,20 @@ class PipelineScheduler:
                 # its *remaining* stages re-jit at the new capacities — a
                 # mixed-capacity wave is still exact (overflow is monotone
                 # and re-checked at its own retire).
-                s, n = self._retire(inflight.popleft(), retry, phase)
+                oldest = inflight.popleft()
+                s, n = self._retire(oldest, retry, phase)
                 cost_sum += s
                 cost_n += n
+                waves_done += 1
+                wave_s_phase += time.perf_counter() - oldest.t_start
+                if auto and waves_done >= 2:
+                    wall = max(time.perf_counter() - t0, 1e-9)
+                    achieved = wave_s_phase / wall   # mean in-flight waves
+                    if achieved >= depth - 0.5 and depth < _MAX_AUTO_DEPTH:
+                        depth += 1
+                    elif achieved < depth - 1.25 and depth > 1:
+                        depth -= 1
+                    self.stats["auto_depth"] = depth
         self.stats[f"{phase}_pipeline_s"] = (
             self.stats.get(f"{phase}_pipeline_s", 0.0)
             + time.perf_counter() - t0)

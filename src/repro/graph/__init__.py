@@ -1,5 +1,8 @@
-from repro.graph.storage import Graph, PartitionedGraph, build_partitioned
-from repro.graph.partition import partition, edge_cut
+from repro.graph.storage import (Graph, PartitionedGraph, build_partitioned,
+                                 DeviceGraph, DenseDeviceGraph,
+                                 BucketedDeviceGraph, device_graph,
+                                 device_formats, register_device_format)
+from repro.graph.partition import partition, partition_device, edge_cut
 from repro.graph.generators import (road_graph, powerlaw_graph, erdos_graph,
                                     community_graph, molecule_batch,
                                     icosahedral_mesh, make_dataset, load_dataset)
@@ -7,6 +10,8 @@ from repro.graph.sampler import SampledSubgraph, sample_neighbors, sample_capaci
 
 __all__ = [
     "Graph", "PartitionedGraph", "build_partitioned", "partition", "edge_cut",
+    "DeviceGraph", "DenseDeviceGraph", "BucketedDeviceGraph", "device_graph",
+    "device_formats", "register_device_format", "partition_device",
     "road_graph", "powerlaw_graph", "erdos_graph", "community_graph",
     "molecule_batch", "icosahedral_mesh", "make_dataset", "load_dataset",
     "SampledSubgraph", "sample_neighbors", "sample_capacities",

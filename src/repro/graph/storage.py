@@ -1,16 +1,44 @@
-"""Graph storage: host-side CSR + device-partitioned padded CSR.
+"""Graph storage: host-side CSR, device partitioning, and the pluggable
+on-device adjacency formats (:class:`DeviceGraph`).
 
 The data graph is undirected and unlabeled (paper §2). On host we keep a
-numpy CSR with *sorted* adjacency rows (dedup'd, no self-loops). For the
-distributed engine each device partition is exported as dense padded
-adjacency (``adj[dev, local_v, :max_degree]`` with sentinel ``n``) plus the
-ownership map the paper assumes every machine holds (§3.2 Expand: "each
-machine has a record of the ownership information ... of all the vertices").
+numpy CSR with *sorted* adjacency rows (dedup'd, no self-loops) inside
+:class:`Graph`; :func:`build_partitioned` renumbers vertices
+device-contiguously into a :class:`PartitionedGraph` (ownership map,
+border flags, border distances — §3.2 / Def. 1).
+
+What actually lives on the accelerators is a :class:`DeviceGraph` — the
+format-pluggable device-side adjacency the R-Meef engine reads.  Every
+format exposes the same tiny device-side interface (``rows_at``/``deg_at``
+over the stacked ``(ndev, ...)`` layout, sentinel ``n``-padded rows of
+width ``max_degree``) so the engine stages, the exchange answer paths and
+the scheduler are format-agnostic; formats register with
+``@register_device_format(name)`` and are selected via
+``EngineConfig.storage_format`` / ``device_graph(pg, fmt)``:
+
+* ``dense``    — today's padded layout ``adj[dev, local_v, :max_degree]``;
+  O(n_local × d_max) memory, one gather per row, and the bit-exact
+  reference the other formats are tested against.
+* ``bucketed`` — degree-bucketed padded CSR slabs: vertices are grouped
+  into power-of-two degree buckets and each bucket is padded only to its
+  own cap, so adjacency memory is ~O(Σ_b n_b · cap_b) ≈ O(2 · Σ deg(v))
+  instead of O(n · d_max).  On power-law graphs (the "memory crisis" skew
+  RADS is built to survive) this decouples the resident footprint from the
+  single worst hub vertex; ``rows_at`` reassembles the dense sentinel-padded
+  window on the fly, so results stay byte-identical to ``dense``.
+
+Both formats are pytrees, so they pass straight through ``jax.jit`` /
+``shard_map`` (the leading ``ndev`` axis shards via
+:meth:`DeviceGraph.shard`); ``adj_bytes`` reports the resident adjacency
+footprint (the ``peak_adj_bytes`` benchmark column).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import ClassVar
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -109,6 +137,10 @@ class PartitionedGraph:
         j = np.searchsorted(row, v)
         return bool(j < row.shape[0] and row[j] == v)
 
+    def to_device(self, fmt: str = "dense") -> "DeviceGraph":
+        """Export this partition in a registered on-device format."""
+        return device_graph(self, fmt)
+
 
 def build_partitioned(graph: Graph, ndev: int, assignment: np.ndarray,
                       max_degree: int | None = None) -> PartitionedGraph:
@@ -186,3 +218,215 @@ def _border_distance(adj: np.ndarray, deg: np.ndarray, border: np.ndarray,
                 nxt.append(fresh)
             frontier = np.unique(np.concatenate(nxt)) if nxt else np.array([], np.int64)
     return out
+
+
+# --------------------------------------------------------------------------- #
+# DeviceGraph: pluggable on-device adjacency formats
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class DeviceGraph:
+    """Abstract on-device adjacency in the stacked ``(ndev, ...)`` layout.
+
+    Concrete formats are registered pytrees: array leaves travel through
+    ``jax.jit``/``vmap``/``shard_map`` while the four metadata ints ride in
+    the static aux data (a shape change re-traces the engine stages, exactly
+    like the old ``GraphMeta``).  The device-side contract every format must
+    honour, for any leading index shape ``li``:
+
+    * ``rows_at(t, li)``  -> ``(..., max_degree)`` int32 adjacency windows —
+      sorted neighbor ids then sentinel ``n`` padding, *byte-identical*
+      across formats (the engine's exchange payloads are built from these);
+    * ``deg_at(t, li)``   -> ``(...,)`` int32 degrees.
+    """
+
+    format: ClassVar[str] = "abstract"
+    # back-edge candidate refinement: False routes through the membership
+    # lowering (the seed path), True through the sorted-window intersect
+    # kernel (Alg. 1 line 6).  A per-format property so new registered
+    # formats pick their kernel without touching the engine.
+    intersect_backedge: ClassVar[bool] = False
+
+    ndev: int
+    stride: int
+    n: int            # sentinel == n
+    max_degree: int
+
+    def rows_at(self, t, li) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def deg_at(self, t, li) -> jnp.ndarray:
+        raise NotImplementedError
+
+    @property
+    def adj_bytes(self) -> int:
+        """Resident device adjacency footprint (all array leaves)."""
+        leaves = jax.tree_util.tree_leaves(self)
+        return int(sum(x.size * x.dtype.itemsize for x in leaves))
+
+    def shard(self, mesh, axis: str = "data") -> "DeviceGraph":
+        """device_put every leaf sharded on its leading ``ndev`` axis."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        def put(x):
+            spec = P(axis, *([None] * (x.ndim - 1)))
+            return jax.device_put(x, NamedSharding(mesh, spec))
+
+        return jax.tree_util.tree_map(put, self)
+
+
+_DEVICE_FORMATS: dict[str, type[DeviceGraph]] = {}
+
+
+def register_device_format(name: str):
+    """Class decorator: make ``device_graph(pg, name)`` resolve to this."""
+    def deco(cls: type[DeviceGraph]) -> type[DeviceGraph]:
+        cls.format = name
+        _DEVICE_FORMATS[name] = cls
+        return cls
+    return deco
+
+
+def device_formats() -> tuple[str, ...]:
+    """Registered on-device adjacency format names (sorted)."""
+    return tuple(sorted(_DEVICE_FORMATS))
+
+
+def device_graph(pg: PartitionedGraph, fmt: str = "dense") -> DeviceGraph:
+    """Export ``pg`` in the registered on-device format ``fmt``."""
+    try:
+        cls = _DEVICE_FORMATS[fmt]
+    except KeyError:
+        raise ValueError(
+            f"unknown storage format {fmt!r}; registered formats: "
+            f"{list(device_formats())}") from None
+    return cls.from_partitioned(pg)
+
+
+@register_device_format("dense")
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class DenseDeviceGraph(DeviceGraph):
+    """The seed layout: ``adj[dev, local_v, :max_degree]`` (bit-exact
+    reference — O(n_local × d_max) memory, one gather per row)."""
+
+    adj: jnp.ndarray   # (ndev, stride, max_degree) int32, sentinel = n
+    deg: jnp.ndarray   # (ndev, stride) int32
+
+    @classmethod
+    def from_partitioned(cls, pg: PartitionedGraph) -> "DenseDeviceGraph":
+        return cls(ndev=pg.ndev, stride=pg.stride, n=pg.n,
+                   max_degree=pg.max_degree,
+                   adj=jnp.asarray(pg.adj), deg=jnp.asarray(pg.deg))
+
+    def rows_at(self, t, li):
+        return self.adj[t][li]
+
+    def deg_at(self, t, li):
+        return self.deg[t][li]
+
+    def tree_flatten(self):
+        return ((self.adj, self.deg),
+                (self.ndev, self.stride, self.n, self.max_degree))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        adj, deg = children
+        return cls(*aux, adj=adj, deg=deg)
+
+
+@register_device_format("bucketed")
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class BucketedDeviceGraph(DeviceGraph):
+    """Degree-bucketed padded CSR slabs.
+
+    Vertices with ``deg > 0`` are grouped into power-of-two degree buckets
+    (cap 1, 2, 4, ... — the top cap is clamped to ``max_degree``); bucket
+    ``b`` stores one slab ``(ndev, n_b_max, cap_b)`` padded only to its own
+    cap, plus O(n) per-vertex ``bucket_of``/``slot_of`` maps.  Adjacency
+    memory is therefore ~O(Σ_b n_b · cap_b) — on skewed graphs a fraction
+    of the dense O(n · d_max) — while ``rows_at`` reassembles the dense
+    sentinel-padded window (so results stay byte-identical to ``dense``).
+    Degree-0 and padding vertices own no slab row: their window is produced
+    entirely by the degree mask.
+    """
+
+    intersect_backedge: ClassVar[bool] = True
+
+    bucket_caps: tuple  # static: padded row width per bucket, ascending
+    deg: jnp.ndarray        # (ndev, stride) int32
+    bucket_of: jnp.ndarray  # (ndev, stride) int32 (0 where deg == 0)
+    slot_of: jnp.ndarray    # (ndev, stride) int32 (0 where deg == 0)
+    slabs: tuple            # per bucket: (ndev, n_b_max, cap_b) int32
+
+    @classmethod
+    def from_partitioned(cls, pg: PartitionedGraph) -> "BucketedDeviceGraph":
+        ndev, stride, n, D = pg.ndev, pg.stride, pg.n, pg.max_degree
+        deg = np.asarray(pg.deg, dtype=np.int32)
+        real_max = int(deg.max()) if deg.size else 0
+        caps: list[int] = []
+        c = 1
+        while c < max(real_max, 1):
+            caps.append(c)
+            c *= 2
+        caps.append(min(c, D) if real_max else 1)
+        caps_arr = np.asarray(caps, dtype=np.int32)
+
+        bucket_of = np.zeros((ndev, stride), dtype=np.int32)
+        slot_of = np.zeros((ndev, stride), dtype=np.int32)
+        has_row = deg > 0
+        bucket_of[has_row] = np.searchsorted(caps_arr, deg[has_row])
+        counts = np.zeros((ndev, len(caps)), dtype=np.int64)
+        for t in range(ndev):
+            for b in range(len(caps)):
+                members = np.flatnonzero(has_row[t] & (bucket_of[t] == b))
+                slot_of[t, members] = np.arange(len(members), dtype=np.int32)
+                counts[t, b] = len(members)
+
+        slabs = []
+        for b, cap in enumerate(caps):
+            nb_max = max(int(counts[:, b].max()), 1)
+            slab = np.full((ndev, nb_max, cap), n, dtype=np.int32)
+            for t in range(ndev):
+                members = np.flatnonzero(has_row[t] & (bucket_of[t] == b))
+                if len(members):
+                    slab[t, :len(members)] = pg.adj[t, members, :cap]
+            slabs.append(jnp.asarray(slab))
+        return cls(ndev=ndev, stride=stride, n=n, max_degree=D,
+                   bucket_caps=tuple(caps), deg=jnp.asarray(deg),
+                   bucket_of=jnp.asarray(bucket_of),
+                   slot_of=jnp.asarray(slot_of), slabs=tuple(slabs))
+
+    def rows_at(self, t, li):
+        b = self.bucket_of[t][li]
+        s = self.slot_of[t][li]
+        d = self.deg[t][li]
+        D = self.max_degree
+        out = jnp.full(jnp.shape(li) + (D,), self.n, dtype=jnp.int32)
+        for bi, cap in enumerate(self.bucket_caps):
+            slab_t = self.slabs[bi][t]                       # (n_b_max, cap)
+            row = slab_t[jnp.clip(s, 0, slab_t.shape[0] - 1)]
+            if cap < D:
+                pad = [(0, 0)] * (row.ndim - 1) + [(0, D - cap)]
+                row = jnp.pad(row, pad, constant_values=self.n)
+            else:
+                row = row[..., :D]
+            out = jnp.where((b == bi)[..., None], row, out)
+        # degree mask: deg-0 / padding vertices never touch a slab row
+        return jnp.where(jnp.arange(D) < d[..., None], out, self.n)
+
+    def deg_at(self, t, li):
+        return self.deg[t][li]
+
+    def tree_flatten(self):
+        return ((self.deg, self.bucket_of, self.slot_of, self.slabs),
+                (self.ndev, self.stride, self.n, self.max_degree,
+                 self.bucket_caps))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        ndev, stride, n, max_degree, bucket_caps = aux
+        deg, bucket_of, slot_of, slabs = children
+        return cls(ndev=ndev, stride=stride, n=n, max_degree=max_degree,
+                   bucket_caps=bucket_caps, deg=deg, bucket_of=bucket_of,
+                   slot_of=slot_of, slabs=tuple(slabs))

@@ -20,13 +20,23 @@ def main():
     ap.add_argument("--no-sme", action="store_true")
     ap.add_argument("--no-steal", action="store_true")
     ap.add_argument("--mode", default="sim", choices=["sim", "gather", "spmd"])
-    ap.add_argument("--pipeline-depth", type=int, default=2,
-                    help="max in-flight waves (1 = synchronous driver)")
+    ap.add_argument("--storage", default="dense",
+                    help="on-device adjacency format (see "
+                         "repro.graph.device_formats(): dense | bucketed)")
+    ap.add_argument("--pipeline-depth", default="2",
+                    help="max in-flight waves (1 = synchronous driver, "
+                         "'auto' = adapt from per-wave timing)")
     ap.add_argument("--no-steal-groups", action="store_true",
                     help="disable steal-from-longest group-queue refill")
     ap.add_argument("--pallas", action="store_true",
-                    help="Pallas membership kernel in back-edge checks")
+                    help="Pallas kernels: membership in back-edge checks, "
+                         "intersect in bucketed candidate generation")
+    ap.add_argument("--priors", default="",
+                    help="JSON cache of per-(pattern, graph) capacity/cost "
+                         "priors; preloaded before and updated after the run")
     args = ap.parse_args()
+    depth = args.pipeline_depth if args.pipeline_depth == "auto" \
+        else int(args.pipeline_depth)
 
     pattern = Pattern.from_edges({**QUERIES, **CLIQUE_QUERIES}[args.query])
     g = load_dataset(args.dataset)
@@ -40,9 +50,11 @@ def main():
     cfg = dataclasses.replace(DEFAULT_ENGINE,
                               enable_sme=not args.no_sme,
                               enable_work_stealing=not args.no_steal,
-                              pipeline_depth=args.pipeline_depth,
+                              pipeline_depth=depth,
                               steal_from_longest=not args.no_steal_groups,
-                              use_pallas_kernels=args.pallas)
+                              use_pallas_kernels=args.pallas,
+                              storage_format=args.storage,
+                              priors_path=args.priors)
     mesh = None
     if args.mode == "spmd":
         from repro.launch.mesh import make_engine_mesh
@@ -57,7 +69,11 @@ def main():
           f"fetchV {st['bytes_fetch']/1e6:.2f}MB verifyE "
           f"{st['bytes_verify']/1e6:.2f}MB | groups {st['n_groups']} "
           f"retries {st['overflow_retries']} escalations {st['cap_escalations']}")
-    print(f"[enum] pipeline: depth {st['pipeline_depth']} | "
+    print(f"[enum] storage {st['storage_format']}: "
+          f"adj {st['peak_adj_bytes'] / 1e6:.2f}MB on device | "
+          f"priors preloaded {st['priors_preloaded']}")
+    print(f"[enum] pipeline: depth {st['pipeline_depth']}"
+          f"{' (auto->%d)' % st['auto_depth'] if 'auto_depth' in st else ''} | "
           f"{st['n_waves']} waves, max {st['max_inflight_waves']} in flight | "
           f"steals {st['steal_events']} | "
           f"wave-time {st['wave_s_total']:.2f}s over "

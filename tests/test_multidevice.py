@@ -1,5 +1,7 @@
 """Multi-device correctness via subprocess (8 forced host devices):
-* SPMD engine (real all_to_all under shard_map) == sim engine == oracle
+* SPMD engine (real all_to_all under shard_map) == sim engine == oracle,
+  across both DeviceGraph storage formats (dense / bucketed) incl. a
+  skewed power-law graph
 * sharded train step == single-device train step
 * compressed_psum == plain psum within quantization error
 Each test spawns one python subprocess so the main pytest process keeps the
@@ -49,6 +51,23 @@ def test_spmd_engine_matches_oracle():
             ok &= canonicalize(sim.embeddings, pat) == oracle
             ok &= spmd.stats['bytes_fetch'] == sim.stats['bytes_fetch']
             ok &= spmd.stats['bytes_verify'] == sim.stats['bytes_verify']
+        # storage-format parity on a skewed graph: the bucketed DeviceGraph
+        # must be byte-identical to dense through the real all_to_all path
+        # (sim/gather x format parity is covered by the fast suite)
+        import dataclasses
+        from repro.graph import powerlaw_graph
+        gp = powerlaw_graph(160, 6, seed=5)
+        pgp = partition(gp, 8, method='bfs')
+        pat = Pattern.from_edges(QUERIES['q1'])
+        oracle = canonicalize(enumerate_oracle(gp, pat), pat)
+        ref_bytes = None
+        for fmt in ['dense', 'bucketed']:
+            cf = dataclasses.replace(cfg, storage_format=fmt)
+            spmd = rads_enumerate(pgp, pat, cf, mode='spmd', mesh=mesh)
+            ok &= canonicalize(spmd.embeddings, pat) == oracle
+            b = (spmd.stats['bytes_fetch'], spmd.stats['bytes_verify'])
+            ref_bytes = ref_bytes or b
+            ok &= b == ref_bytes
         # multi-group workload: the async staged scheduler must pipeline
         # >= 2 waves through the real all_to_all spmd backend
         import dataclasses

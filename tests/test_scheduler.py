@@ -9,9 +9,9 @@ import pytest
 from repro.configs.rads import QUERIES, EngineConfig
 from repro.core import (Pattern, PipelineScheduler, StageRunner, best_plan,
                         canonicalize, enumerate_oracle, rads_enumerate)
-from repro.core.engine import build_plan_data, graph_device_arrays
+from repro.core.engine import build_plan_data
 from repro.core.exchange import Exchange
-from repro.graph import erdos_graph, partition
+from repro.graph import device_graph, erdos_graph, partition
 
 # region_group_budget=64 => many small region groups per device — the
 # multi-group workload the pipeline needs to show overlap.
@@ -92,9 +92,8 @@ def test_steal_from_longest_queue():
     oracle = canonicalize(enumerate_oracle(g, pat), pat)
     plan = best_plan(pat)
     pd = build_plan_data(plan)
-    adj, deg, meta = graph_device_arrays(pg)
     cfg = EngineConfig(frontier_cap=1 << 13, fetch_cap=512, verify_cap=2048)
-    runner = StageRunner(adj, deg, meta, pd, cfg, Exchange("sim"))
+    runner = StageRunner(device_graph(pg, "dense"), pd, cfg, Exchange("sim"))
 
     # every candidate seed exactly once, packed into groups of 8 that all
     # start on device 0 — devices 1..3 drain immediately and must steal

@@ -1,0 +1,131 @@
+"""Pluggable on-device storage formats (graph/storage.py DeviceGraph):
+
+* dense vs bucketed rows are byte-identical (the engine contract),
+* backend parity on *skewed* (power-law) graphs — sim == gather == oracle
+  across both formats with identical traffic accounting (spmd parity runs
+  in the slow multi-device subprocess suite, test_multidevice.py),
+* the bucketed footprint beats dense by >= 4x on the acceptance-scale
+  power-law graph (memory decoupled from the worst hub vertex),
+* the Pallas ``intersect`` candidate-generation path (bucketed layout,
+  interpret mode on CPU) changes nothing.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.rads import QUERIES, EngineConfig
+from repro.core import Pattern, canonicalize, enumerate_oracle, rads_enumerate
+from repro.graph import (device_formats, device_graph, partition,
+                         partition_device, powerlaw_graph)
+
+CFG = EngineConfig(frontier_cap=1 << 13, fetch_cap=512, verify_cap=2048,
+                   region_group_budget=1 << 12)
+
+
+@pytest.fixture(scope="module")
+def skewed():
+    g = powerlaw_graph(256, 8, seed=2)
+    return g, partition(g, 4, method="bfs")
+
+
+def test_device_formats_registered():
+    assert {"dense", "bucketed"} <= set(device_formats())
+
+
+def test_rows_byte_identical(skewed):
+    """The DeviceGraph contract: every format reassembles the same
+    sentinel-padded adjacency windows (incl. deg-0 and padding rows)."""
+    _, pg = skewed
+    dense = device_graph(pg, "dense")
+    bucketed = device_graph(pg, "bucketed")
+    li = np.arange(pg.stride)
+    for t in range(pg.ndev):
+        assert np.array_equal(np.asarray(dense.rows_at(t, li)),
+                              np.asarray(bucketed.rows_at(t, li))), t
+        assert np.array_equal(np.asarray(dense.deg_at(t, li)),
+                              np.asarray(bucketed.deg_at(t, li))), t
+    # multi-dim index shape (the exchange answer paths gather 2-D blocks)
+    li2 = np.arange(min(16, pg.stride)).reshape(4, -1)
+    assert np.array_equal(np.asarray(dense.rows_at(1, li2)),
+                          np.asarray(bucketed.rows_at(1, li2)))
+
+
+@pytest.mark.parametrize("qname", ["q1", "q3"])
+def test_backend_parity_powerlaw(skewed, qname):
+    """sim == gather == oracle on a skewed graph, for both storage
+    formats, with byte-identical counts and traffic accounting."""
+    g, pg = skewed
+    pat = Pattern.from_edges(QUERIES[qname])
+    oracle = canonicalize(enumerate_oracle(g, pat), pat)
+    ref = None
+    for fmt in ("dense", "bucketed"):
+        for mode in ("sim", "gather"):
+            cfg = dataclasses.replace(CFG, storage_format=fmt)
+            res = rads_enumerate(pg, pat, cfg, mode=mode)
+            assert canonicalize(res.embeddings, pat) == oracle, (fmt, mode)
+            key = (res.count, res.stats["bytes_fetch"],
+                   res.stats["bytes_verify"])
+            ref = ref or key
+            assert key == ref, (fmt, mode)
+            assert res.stats["storage_format"] == fmt
+
+
+def test_bucketed_memory_at_most_quarter_of_dense():
+    """Acceptance bar: on a power-law graph (n=4096, avg_deg=8) the
+    bucketed adjacency footprint is <= 1/4 of dense."""
+    g = powerlaw_graph(4096, 8, seed=1)
+    pg, bucketed = partition_device(g, 4, method="bfs", fmt="bucketed")
+    dense = device_graph(pg, "dense")
+    assert bucketed.adj_bytes * 4 <= dense.adj_bytes, (
+        bucketed.adj_bytes, dense.adj_bytes)
+
+
+def test_pallas_intersect_candidate_generation(skewed):
+    """use_pallas_kernels on the bucketed layout routes the back-edge
+    candidate refinement through the Pallas intersect kernel (interpret
+    mode on CPU) — results must not change."""
+    g, pg = skewed
+    pat = Pattern.from_edges(QUERIES["q3"])
+    oracle = canonicalize(enumerate_oracle(g, pat), pat)
+    cfg = dataclasses.replace(CFG, storage_format="bucketed",
+                              use_pallas_kernels=True)
+    res = rads_enumerate(pg, pat, cfg, mode="sim")
+    assert res.count == len(oracle)
+    assert canonicalize(res.embeddings, pat) == oracle
+
+
+def test_auto_pipeline_depth_matches_oracle(skewed):
+    """pipeline_depth='auto' (depth steered by per-wave timing stats) must
+    stay oracle-exact and record the chosen depth."""
+    g, pg = skewed
+    pat = Pattern.from_edges(QUERIES["q1"])
+    oracle = canonicalize(enumerate_oracle(g, pat), pat)
+    cfg = dataclasses.replace(CFG, region_group_budget=64, enable_sme=False,
+                              pipeline_depth="auto",
+                              storage_format="bucketed")
+    res = rads_enumerate(pg, pat, cfg, mode="sim")
+    assert canonicalize(res.embeddings, pat) == oracle
+    assert res.stats.get("auto_depth", 0) >= 1
+    assert res.stats["n_waves"] >= 4
+
+
+def test_priors_cache_skips_escalations(skewed, tmp_path):
+    """Run 1 with tiny caps escalates and persists priors; run 2 preloads
+    them and completes with zero mid-enumeration re-jits."""
+    g, pg = skewed
+    pat = Pattern.from_edges(QUERIES["q1"])
+    oracle = canonicalize(enumerate_oracle(g, pat), pat)
+    pp = str(tmp_path / "priors.json")
+    tiny = EngineConfig(frontier_cap=8, fetch_cap=16, verify_cap=16,
+                        region_group_budget=64, priors_path=pp)
+    first = rads_enumerate(pg, pat, tiny, mode="sim")
+    assert canonicalize(first.embeddings, pat) == oracle
+    assert first.stats["cap_escalations"] >= 1
+    assert not first.stats["priors_preloaded"]
+    second = rads_enumerate(pg, pat, tiny, mode="sim")
+    assert canonicalize(second.embeddings, pat) == oracle
+    assert second.stats["priors_preloaded"]
+    assert second.stats["cap_escalations"] == 0
+    caps = second.stats["final_caps"]
+    assert caps["frontier"] >= first.stats["final_caps"]["frontier"]
