@@ -20,14 +20,15 @@ verify-slow:
 verify-all:
 	$(PY) -m pytest -x -q
 
-## collection regression gate: all 10 test modules must import cleanly
+## collection regression gate: every test module must import cleanly
 collect-check:
 	$(PY) -m pytest -q --collect-only >/dev/null
 
 ## ~30s enumeration benchmark subset; writes BENCH_enumeration.json
-## (patterns x backends x storage formats, compile vs steady wall split,
-## peak_adj_bytes dense-vs-bucketed, sync-vs-async overlap comparison).
-## Fails if the dense and bucketed storage formats disagree on any count.
+## (patterns x backends x storage formats x adjacency-cache on/off,
+## compile vs steady wall split, peak_adj_bytes dense-vs-bucketed,
+## cache hit-rate / bytes_saved_cache, sync-vs-async overlap comparison).
+## Fails if storage formats OR cache configurations disagree on any count.
 .PHONY: bench-smoke
 bench-smoke:
 	XLA_FLAGS="--xla_cpu_multi_thread_eigen=false" \
@@ -39,10 +40,25 @@ bench-smoke:
 	byq=collections.defaultdict(set); \
 	[byq[(r['dataset'], r['query'])].add(r['count']) for r in rows]; \
 	bad={k: sorted(v) for k, v in byq.items() if len(v) != 1}; \
-	assert not bad, 'dense vs bucketed count divergence: %r' % bad; \
+	assert not bad, \
+	'storage/cache count divergence (dense vs bucketed vs cache-off): %r' \
+	% bad; \
+	mis=[r for r in rows if 'cache_enabled' in r \
+	     and r['cache_enabled'] != (r.get('cache') == 'on')]; \
+	assert not mis, 'cache config not honoured (silently on/off): %r' % mis; \
 	adj={r['storage']: r['peak_adj_bytes'] for r in rows \
-	     if r['system'] == 'rads-sim'}; \
-	print('bench-smoke: %d result rows, storage counts agree; ' \
-	'adj bytes dense %d vs bucketed %d; sync %.0fus async %.0fus (async<=sync: %s)' \
+	     if r['system'] == 'rads-sim' and r.get('cache') == 'on'}; \
+	con=[r for r in rows if r['system'] == 'rads-sim' \
+	     and r.get('cache') == 'on']; \
+	dead=[r for r in con if r.get('cache_hit_rate_warm', 1.0) <= 0.0]; \
+	assert not dead, \
+	'cache-on rows with zero warm hit-rate (probe/insert path broken): %r' \
+	% dead; \
+	hit=max((r['cache_hit_rate'] for r in con), default=0.0); \
+	whit=max((r.get('cache_hit_rate_warm', 0.0) for r in con), default=0.0); \
+	sav=max((r['bytes_saved_cache'] for r in con), default=0.0); \
+	print('bench-smoke: %d result rows, storage+cache counts agree; ' \
+	'adj bytes dense %d vs bucketed %d; cache hit-rate %.3f (warm %.3f) ' \
+	'bytes_saved_cache %.0f; sync %.0fus async %.0fus (async<=sync: %s)' \
 	% (len(d['results']), adj.get('dense', -1), adj.get('bucketed', -1), \
-	t['sync_us'], t['async_us'], t['async_leq_sync']))"
+	hit, whit, sav, t['sync_us'], t['async_us'], t['async_leq_sync']))"

@@ -15,9 +15,12 @@ benchmark (and thereby ``make bench-smoke`` / CI).
 Besides the ``common.emit`` CSV lines, the run writes a machine-readable
 ``BENCH_enumeration.json`` with two sections:
 
-* ``results``      — patterns × systems/backends × storage formats:
-  ``compile_us``/``wall_us``, match count, comm bytes, ``peak_adj_bytes``
-  (the perf-trajectory payload);
+* ``results``      — patterns × systems/backends × storage formats ×
+  adjacency-cache on/off: ``compile_us``/``wall_us``, match count, comm
+  bytes (plus ``bytes_saved_cache`` / ``cache_hit_rate`` /
+  ``bytes_fetch_compressed``), ``peak_adj_bytes`` (the perf-trajectory
+  payload); a count divergence between cache configurations aborts the
+  benchmark exactly like a storage-format divergence;
 * ``sync_vs_async`` — the staged scheduler timed on the *same warm jitted
   stages* with ``depth=1`` (the old synchronous wave loop) vs
   ``depth=2`` (double-buffered pipeline, lazy Algorithm-3 grouping and
@@ -138,16 +141,20 @@ def run(datasets=("dblp_bench", "roadnet_bench", "livejournal_bench",
         for q in qs:
             pat = Pattern.from_edges(QUERIES[q])
             counts: set[int] = set()
-            # sim backend × both storage formats; a shared runner_cache makes
-            # the second call reuse the jitted stages, so the warm run times
-            # steady-state execution and compile_us is the cold-warm delta
-            for fmt in STORAGE_FORMATS:
-                cfg_fmt = dataclasses.replace(CFG, storage_format=fmt)
+            # sim backend × both storage formats × adjacency cache on/off
+            # (cache-off only on dense — the cache is format-agnostic); a
+            # shared runner_cache makes the second call reuse the jitted
+            # stages, so the warm run times steady-state execution and
+            # compile_us is the cold-warm delta
+            for fmt, use_cache in [(f, True) for f in STORAGE_FORMATS] + [
+                    ("dense", False)]:
+                cfg_fmt = dataclasses.replace(CFG, storage_format=fmt,
+                                              enable_cache=use_cache)
                 cache: dict = {}
                 t0 = time.perf_counter()
-                r = rads_enumerate(pg, pat, cfg_fmt, mode="sim",
-                                   return_embeddings=False,
-                                   runner_cache=cache)
+                rc = rads_enumerate(pg, pat, cfg_fmt, mode="sim",
+                                    return_embeddings=False,
+                                    runner_cache=cache)
                 cold_us = (time.perf_counter() - t0) * 1e6
                 t0 = time.perf_counter()
                 r = rads_enumerate(pg, pat, cfg_fmt, mode="sim",
@@ -155,45 +162,71 @@ def run(datasets=("dblp_bench", "roadnet_bench", "livejournal_bench",
                                    runner_cache=cache)
                 wall_us = (time.perf_counter() - t0) * 1e6
                 compile_us = max(cold_us - wall_us, 0.0)
-                rads_bytes = r.stats["bytes_fetch"] + r.stats["bytes_verify"]
-                emit(f"enum/{ds}/{q}/rads-{fmt}", wall_us,
+                # byte/cache traffic columns come from the COLD run (the
+                # within-run truth); the WARM run reuses the runner's
+                # already-populated AdjCache, so its hit rate is the
+                # functional end-to-end signal the smoke gate checks — a
+                # broken probe/insert path shows up as hit_rate_warm == 0
+                st = rc.stats
+                rads_bytes = st["bytes_fetch"] + st["bytes_verify"]
+                tag = "" if use_cache else "-nocache"
+                emit(f"enum/{ds}/{q}/rads-{fmt}{tag}", wall_us,
                      f"count={r.count};comm_bytes={rads_bytes:.0f};"
                      f"compile_us={compile_us:.0f};"
-                     f"peak_adj_bytes={r.stats['peak_adj_bytes']};"
-                     f"sme={r.stats['n_sme_seeds']}")
+                     f"peak_adj_bytes={st['peak_adj_bytes']};"
+                     f"cache_hit_rate={st['cache_hit_rate']:.3f};"
+                     f"cache_hit_rate_warm={r.stats['cache_hit_rate']:.3f};"
+                     f"bytes_saved_cache={st['bytes_saved_cache']:.0f};"
+                     f"sme={st['n_sme_seeds']}")
                 out["results"].append(dict(
                     dataset=ds, query=q, system="rads-sim", storage=fmt,
+                    cache="on" if use_cache else "off",
+                    cache_enabled=bool(st["cache_enabled"]),
+                    cache_probes=float(st["cache_probes"]),
                     wall_us=wall_us, compile_us=compile_us,
                     count=int(r.count), comm_bytes=float(rads_bytes),
-                    bytes_fetch=float(r.stats["bytes_fetch"]),
-                    bytes_verify=float(r.stats["bytes_verify"]),
-                    peak_adj_bytes=int(r.stats["peak_adj_bytes"]),
-                    n_waves=int(r.stats["n_waves"]),
-                    max_inflight_waves=int(r.stats["max_inflight_waves"])))
+                    bytes_fetch=float(st["bytes_fetch"]),
+                    bytes_verify=float(st["bytes_verify"]),
+                    bytes_fetch_compressed=float(
+                        st["bytes_fetch_compressed"]),
+                    bytes_saved_cache=float(st["bytes_saved_cache"]),
+                    cache_hit_rate=float(st["cache_hit_rate"]),
+                    cache_hit_rate_warm=float(r.stats["cache_hit_rate"]),
+                    bytes_saved_cache_warm=float(
+                        r.stats["bytes_saved_cache"]),
+                    peak_adj_bytes=int(st["peak_adj_bytes"]),
+                    n_waves=int(st["n_waves"]),
+                    max_inflight_waves=int(st["max_inflight_waves"])))
                 counts.add(r.count)
+                counts.add(rc.count)
             if smoke:   # keep the patterns x backends axis in the subset
                 cfg_g = dataclasses.replace(CFG, storage_format="bucketed")
                 cache = {}
                 t0 = time.perf_counter()
-                rg = rads_enumerate(pg, pat, cfg_g, mode="gather",
-                                    return_embeddings=False,
-                                    runner_cache=cache)
+                rgc = rads_enumerate(pg, pat, cfg_g, mode="gather",
+                                     return_embeddings=False,
+                                     runner_cache=cache)
                 cold_us = (time.perf_counter() - t0) * 1e6
                 t0 = time.perf_counter()
                 rg = rads_enumerate(pg, pat, cfg_g, mode="gather",
                                     return_embeddings=False,
                                     runner_cache=cache)
                 t_g = (time.perf_counter() - t0) * 1e6
-                g_bytes = rg.stats["bytes_fetch"] + rg.stats["bytes_verify"]
+                # cold-run stats for the same warm-cache reason as above
+                g_bytes = (rgc.stats["bytes_fetch"]
+                           + rgc.stats["bytes_verify"])
                 emit(f"enum/{ds}/{q}/rads-gather-bucketed", t_g,
                      f"count={rg.count};comm_bytes={g_bytes:.0f}")
                 out["results"].append(dict(
                     dataset=ds, query=q, system="rads-gather",
-                    storage="bucketed", wall_us=t_g,
+                    storage="bucketed", cache="on", wall_us=t_g,
                     compile_us=max(cold_us - t_g, 0.0),
-                    peak_adj_bytes=int(rg.stats["peak_adj_bytes"]),
+                    peak_adj_bytes=int(rgc.stats["peak_adj_bytes"]),
+                    cache_hit_rate=float(rgc.stats["cache_hit_rate"]),
+                    bytes_saved_cache=float(rgc.stats["bytes_saved_cache"]),
                     count=int(rg.count), comm_bytes=float(g_bytes)))
                 counts.add(rg.count)
+                counts.add(rgc.count)
             if not smoke:
                 p = psgl_enumerate(pg, pat, return_embeddings=False)
                 emit(f"enum/{ds}/{q}/psgl", p.seconds * 1e6,

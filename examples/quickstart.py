@@ -33,7 +33,9 @@ for qname in ("q1", "q5"):
     print(f"RADS: {res.count} embeddings in {dt:.2f}s | SM-E seeds "
           f"{st['n_sme_seeds']}/{st['n_sme_seeds']+st['n_dist_seeds']} | "
           f"fetchV {st['bytes_fetch']/1e3:.1f}KB verifyE "
-          f"{st['bytes_verify']/1e3:.1f}KB")
+          f"{st['bytes_verify']/1e3:.1f}KB | adj-cache hit-rate "
+          f"{st['cache_hit_rate']:.2f} (saved "
+          f"{st['bytes_saved_cache']/1e3:.1f}KB)")
     base = psgl_enumerate(pg, pattern, return_embeddings=False)
     print(f"PSgL baseline: {base.count} embeddings, shuffled "
           f"{base.bytes_shuffled/1e3:.1f}KB "

@@ -19,8 +19,11 @@ class EngineConfig:
     verify_cap: int = 1 << 14          # max undetermined-edge queries per round/peer
     region_group_budget: int = 1 << 14 # memory-control target: est. trie nodes/group
     enable_sme: bool = True            # SM-E local/distributed split (Prop. 1)
-    enable_cache: bool = True          # foreign adjacency cache
-    cache_slots: int = 1 << 12         # direct-mapped cache rows
+    # --- foreign-adjacency cache (core/cache.py AdjCache) ------------------- #
+    enable_cache: bool = True          # device-resident fetchV row cache (§7)
+    cache_slots: int = 1 << 12         # sets per device (must be a power of 2:
+                                       # the set index is `v & (slots - 1)`)
+    cache_ways: int = 2                # associativity (1 = direct-mapped)
     enable_work_stealing: bool = True  # checkR/shareR analogue (seed rebalance)
     plan_rho: float = 1.0              # score-function exponent (paper uses 1)
     seed: int = 0
@@ -39,6 +42,15 @@ class EngineConfig:
     use_pallas_kernels: bool = False   # Pallas membership in back-edge checks +
                                        # intersect in bucketed candidate gen
                                        # (off on CPU: jnp reference is the test path)
+
+    def __post_init__(self):
+        if self.cache_slots <= 0 or (self.cache_slots
+                                     & (self.cache_slots - 1)):
+            raise ValueError(
+                f"cache_slots must be a positive power of two (the set "
+                f"index is a bitmask), got {self.cache_slots}")
+        if self.cache_ways < 1:
+            raise ValueError(f"cache_ways must be >= 1, got {self.cache_ways}")
 
 
 # dataset stand-ins: name -> generator kwargs (see graph/generators.py)

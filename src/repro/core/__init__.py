@@ -8,6 +8,7 @@ from repro.core.plan import (Plan, Unit, best_plan, enumerate_plans,
 from repro.core.engine import (PlanData, build_plan_data, run_rounds,
                                WaveState, init_wave, fetch_stage,
                                expand_stage, verify_stage, finalize_wave)
+from repro.core.cache import AdjCache, build_cache
 from repro.core.scheduler import GroupQueue, PipelineScheduler, StageRunner
 from repro.core.driver import (rads_enumerate, EnumerationResult,
                                extract_embeddings)
@@ -27,6 +28,7 @@ __all__ = [
     "WaveState", "init_wave",
     "fetch_stage", "expand_stage", "verify_stage", "finalize_wave",
     "load_priors", "priors_key", "save_priors",
+    "AdjCache", "build_cache",
     "GroupQueue", "PipelineScheduler", "StageRunner",
     "iter_region_groups",
     "rads_enumerate", "EnumerationResult", "extract_embeddings",

@@ -1,0 +1,229 @@
+"""Device-resident foreign-adjacency cache (the paper's §7 caching heuristic).
+
+R-Meef rounds repeatedly ``fetchV`` the adjacency lists of the same foreign
+pivots — across leaf steps, waves, and region groups — because popular
+(hub) vertices appear as ``f(pivot)`` in many partial embeddings.  This
+module keeps a per-device, *device-resident* cache of previously fetched
+foreign rows so repeat requests are answered locally and masked out of the
+all-to-all exchange entirely.
+
+Slab layout
+-----------
+The cache is a set-associative slab in the engine's stacked ``(ndev, ...)``
+layout (one independent cache per device):
+
+* ``keys``    — ``(ndev, slots, ways)`` int32 vertex ids; the sentinel ``n``
+  marks an invalid line.  A vertex ``v`` can only live in set
+  ``v % slots`` (``slots`` is a power of two, enforced by
+  ``EngineConfig.__post_init__``, so the modulo is a mask); ``ways`` is the
+  associativity axis — ``ways=1`` degenerates to a plain direct-mapped
+  cache.
+* ``rows``    — ``(ndev, slots, ways, line_width)`` int32 payloads: the
+  sentinel-padded sorted adjacency windows exactly as ``DeviceGraph.rows_at``
+  produces them (``line_width`` is the graph's top bucketed cap /
+  ``max_degree``), so a hit is byte-identical to a fresh fetch.
+* ``benefit`` — ``(ndev, slots, ways)`` int32 benefit counters implementing
+  the paper's admission rule (below).  Invalid lines sit at a large
+  negative benefit so empty ways fill first.
+
+Benefit-based admission / eviction
+----------------------------------
+The paper's caching heuristic scores a vertex by *fetch frequency × row
+size* — caching a hub's long row saves more wire bytes per hit than a
+leaf's short row.  The counters realize that score online:
+
+* on a **hit**, the line's benefit grows by its payload size
+  (``deg + 1`` — row words plus the request id it saved);
+* on a **miss**, the fetched row becomes an insert candidate with initial
+  benefit ``deg + 1``; the victim is the minimum-benefit way of its set and
+  the candidate is admitted only if its benefit is >= the victim's;
+* a **rejected** candidate decays the victim by its own benefit (aging), so
+  a stale once-hot line loses a contest against a line that keeps being
+  fetched — frequency × size decides, not recency alone.
+
+Within one update batch at most one insert lands per set (all candidates of
+a set see the same pre-update benefit, hence pick the same victim way); the
+winner is chosen deterministically (max benefit, then smallest id), so
+cache contents — and therefore the byte accounting — are identical across
+the ``sim`` / ``gather`` / ``spmd`` exchange backends and both storage
+formats.
+
+jit invariants
+--------------
+:class:`AdjCache` is a registered pytree (array leaves + static geometry
+aux), exactly like :class:`~repro.graph.storage.DeviceGraph`: it travels
+*through* the jitted engine stages as an argument and a result, so probe,
+merge, and admission all run on device with no host round-trips.
+:class:`~repro.core.scheduler.StageRunner` owns the state across waves and
+re-threads the same arrays through re-jitted stages when a capacity
+escalation changes the stage shapes (the cache geometry never depends on
+the engine capacities).  ``shard`` places the leading ``ndev`` axis on a
+mesh for the spmd backend; every cache operation is per-device
+(vmapped/elementwise over that axis), so sharding propagates with no extra
+collectives.
+
+Correctness note: cache state only ever changes *which transport* delivers
+a row (wire vs. local slab), never the row's bytes — enumeration results
+are invariant to cache configuration, hit pattern, and eviction order.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+# invalid lines sit far below any reachable benefit so empty ways always
+# lose the victim contest; live counters are clamped to the same magnitude
+_EMPTY_BENEFIT = -(1 << 20)
+_BENEFIT_CLAMP = 1 << 20
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class AdjCache:
+    """Set-associative foreign-adjacency cache state (see module docstring).
+
+    Array leaves are pytree children; the geometry ints are static aux data
+    (a geometry change re-traces the engine stages, like ``DeviceGraph``).
+    """
+
+    ndev: int
+    slots: int        # sets per device (power of two)
+    ways: int         # associativity (1 = direct-mapped)
+    n: int            # sentinel / invalid key (== graph.n)
+    line_width: int   # payload row width (== graph.max_degree)
+
+    keys: jnp.ndarray     # (ndev, slots, ways) int32, n = invalid
+    rows: jnp.ndarray     # (ndev, slots, ways, line_width) int32
+    benefit: jnp.ndarray  # (ndev, slots, ways) int32
+
+    @classmethod
+    def build(cls, ndev: int, slots: int, ways: int, n: int,
+              line_width: int) -> "AdjCache":
+        """An all-invalid cache of the given geometry."""
+        return cls(
+            ndev=ndev, slots=slots, ways=ways, n=n, line_width=line_width,
+            keys=jnp.full((ndev, slots, ways), n, jnp.int32),
+            rows=jnp.full((ndev, slots, ways, line_width), n, jnp.int32),
+            benefit=jnp.full((ndev, slots, ways), _EMPTY_BENEFIT, jnp.int32))
+
+    @property
+    def cache_bytes(self) -> int:
+        """Resident device footprint of the cache arrays."""
+        leaves = jax.tree_util.tree_leaves(self)
+        return int(sum(x.size * x.dtype.itemsize for x in leaves))
+
+    def shard(self, mesh, axis: str = "data") -> "AdjCache":
+        """device_put every leaf sharded on its leading ``ndev`` axis."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        def put(x):
+            spec = P(axis, *([None] * (x.ndim - 1)))
+            return jax.device_put(x, NamedSharding(mesh, spec))
+
+        return jax.tree_util.tree_map(put, self)
+
+    # -- device-side ops (stacked layout; vmapped per device) --------------- #
+    def updated(self, ids: jnp.ndarray, hit: jnp.ndarray, way: jnp.ndarray,
+                rows: jnp.ndarray) -> "AdjCache":
+        """Apply one batch of probe outcomes: bump hit lines, admit misses.
+
+        ``ids``/``hit``/``way``: (ndev, M); ``rows``: (ndev, M, line_width)
+        — the merged fetch responses (cached row where hit, wire row where
+        miss).  Ids must be unique per device among valid (< n) entries
+        (the fetchV request buffers are deduped upstream).
+        """
+        n = self.n
+        k, r, b = jax.vmap(
+            lambda ck, cr, cb, i, h, w, rw: _update_dev(
+                ck, cr, cb, n, i, h, w, rw)
+        )(self.keys, self.rows, self.benefit, ids, hit, way, rows)
+        return AdjCache(ndev=self.ndev, slots=self.slots, ways=self.ways,
+                        n=self.n, line_width=self.line_width,
+                        keys=k, rows=r, benefit=b)
+
+    def tree_flatten(self):
+        return ((self.keys, self.rows, self.benefit),
+                (self.ndev, self.slots, self.ways, self.n, self.line_width))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        keys, rows, benefit = children
+        return cls(*aux, keys=keys, rows=rows, benefit=benefit)
+
+
+def build_cache(cfg, g) -> AdjCache | None:
+    """Construct the cache ``EngineConfig`` asks for (``None`` = disabled).
+
+    ``g`` is any :class:`~repro.graph.storage.DeviceGraph`: the cache only
+    needs its geometry (``ndev``, sentinel ``n``, ``max_degree`` — the row
+    width every format's ``rows_at`` pads to).
+    """
+    if not cfg.enable_cache:
+        return None
+    return AdjCache.build(ndev=g.ndev, slots=cfg.cache_slots,
+                          ways=cfg.cache_ways, n=g.n,
+                          line_width=g.max_degree)
+
+
+# --------------------------------------------------------------------------- #
+# Per-device primitives (no leading ndev axis — callers vmap)
+# --------------------------------------------------------------------------- #
+def probe_dev(keys: jnp.ndarray, rows: jnp.ndarray, ids: jnp.ndarray,
+              n: int):
+    """Look ``ids`` (M,) up in one device's cache.
+
+    Returns ``(hit (M,) bool, way (M,) int32, out_rows (M, line_width))``;
+    missed / sentinel ids get ``hit=False`` and an all-sentinel row.
+    """
+    slots = keys.shape[0]
+    slot = jnp.bitwise_and(ids, slots - 1)           # slots is a power of two
+    k = keys[slot]                                   # (M, ways)
+    eq = (k == ids[:, None]) & (ids[:, None] < n)
+    hit = jnp.any(eq, axis=-1)
+    way = jnp.argmax(eq, axis=-1).astype(jnp.int32)
+    out = rows[slot, way]                            # (M, line_width)
+    out = jnp.where(hit[:, None], out, n)
+    return hit, way, out
+
+
+def _update_dev(keys, rows, ben, n, ids, hit, way, frows):
+    """One device's benefit bump + admission pass (see module docstring)."""
+    slots, ways = keys.shape
+    valid = ids < n
+    deg = (frows < n).sum(-1).astype(jnp.int32)
+    weight = deg + 1                                 # row words + request id
+    slot = jnp.bitwise_and(ids, slots - 1)
+
+    # 1. hits: grow the line's benefit by the bytes it just saved.  Distinct
+    #    ids can never share a line (one key per line), so the scatter-add
+    #    has no meaningful duplicates (non-hits add at a dropped index).
+    ben = ben.at[jnp.where(hit & valid, slot, slots), way].add(
+        jnp.where(hit & valid, weight, 0), mode="drop")
+
+    # 2. misses: victim = min-benefit way of the set, admitted only if the
+    #    candidate's benefit wins; rejected candidates age the victim.
+    cand = valid & ~hit
+    bset = ben[slot]                                 # (M, ways)
+    victim = jnp.argmin(bset, axis=-1).astype(jnp.int32)
+    vben = jnp.min(bset, axis=-1)
+    admit = cand & (weight >= vben)
+    ben = ben.at[jnp.where(cand & ~admit, slot, slots), victim].add(
+        jnp.where(cand & ~admit, -weight, 0), mode="drop")
+
+    # 3. dedup winners per (set, victim way): every candidate of a set saw
+    #    the same pre-update benefit, so they all picked the same victim —
+    #    keep the max-benefit candidate (smallest id on ties) so insertion
+    #    is deterministic across backends and schedules.
+    lkey = jnp.where(admit, slot * ways + victim, slots * ways)
+    order = jnp.lexsort((ids, -weight, lkey))
+    lk_s = lkey[order]
+    first = jnp.concatenate([jnp.array([True]), lk_s[1:] != lk_s[:-1]])
+    win = first & admit[order]
+    wslot = jnp.where(win, slot[order], slots)       # out-of-range => drop
+    wway = victim[order]
+    keys = keys.at[wslot, wway].set(ids[order], mode="drop")
+    rows = rows.at[wslot, wway].set(frows[order], mode="drop")
+    ben = ben.at[wslot, wway].set(weight[order], mode="drop")
+    return keys, rows, jnp.clip(ben, -_BENEFIT_CLAMP, _BENEFIT_CLAMP)

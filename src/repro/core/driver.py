@@ -10,8 +10,13 @@ this module only
 * classifies seeds (SM-E vs distributed, Prop. 1),
 * exports the partition in the configured on-device storage format
   (``EngineConfig.storage_format`` -> :func:`repro.graph.storage.device_graph`),
+* constructs the device-resident foreign-adjacency cache from
+  ``EngineConfig`` (:func:`repro.core.cache.build_cache`; sharded on the
+  mesh for spmd) and hands it to the :class:`StageRunner` that owns it,
 * preloads / persists the per-(pattern, graph) capacity & cost priors
-  (:mod:`repro.core.priors`) so repeat runs skip the escalate/re-jit ladder,
+  (:mod:`repro.core.priors`) — including the v2 per-seed ``node_counts``
+  histogram (skew-aware wave sizing) and the learned auto pipeline depth —
+  so repeat runs skip the escalate/re-jit ladder,
 * builds the per-device region-group queues (§6, Algorithm 3),
 * launches the two scheduler phases, and
 * assembles the :class:`EnumerationResult` (counts, embeddings, stats).
@@ -24,10 +29,12 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.configs.rads import DEFAULT_ENGINE, EngineConfig
+from repro.core.cache import build_cache
 from repro.core.engine import PlanData, build_plan_data
 from repro.core.exchange import Exchange
 from repro.core.plan import Plan, best_plan
-from repro.core.priors import load_priors, priors_key, save_priors
+from repro.core.priors import (HIST_BINS, hist_percentile, hist_update,
+                               load_priors, priors_key, save_priors)
 from repro.core.query import Pattern
 from repro.core.region import iter_region_groups
 from repro.core.scheduler import GroupQueue, PipelineScheduler, StageRunner
@@ -97,9 +104,13 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
         runner = hit[-1] if hit is not None else None
     if runner is None:
         g = device_graph(pg, cfg.storage_format)
+        adj_cache = build_cache(cfg, g)           # None when disabled
         if mode == "spmd":
             g = g.shard(mesh)
-        runner = StageRunner(g, pd, cfg, Exchange(mode=mode, mesh=mesh))
+            if adj_cache is not None:
+                adj_cache = adj_cache.shard(mesh)
+        runner = StageRunner(g, pd, cfg, Exchange(mode=mode, mesh=mesh),
+                             cache=adj_cache)
         if ck is not None:
             runner_cache[ck] = (pg, explicit_plan, runner)
 
@@ -121,6 +132,11 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
     stats = dict(n_sme_seeds=int(sum(len(s) for s in sme_seeds)),
                  n_dist_seeds=len(dist_seeds_all),
                  bytes_fetch=0.0, bytes_verify=0.0, n_groups=0,
+                 bytes_fetch_compressed=0.0, bytes_saved_cache=0.0,
+                 cache_hits=0.0, cache_probes=0.0,
+                 cache_enabled=bool(runner.cache is not None),
+                 cache_bytes=int(runner.cache.cache_bytes)
+                 if runner.cache is not None else 0,
                  overflow_retries=0, cap_escalations=0,
                  plan_rounds=plan.n_rounds,
                  sme_count=0, dist_count=0,
@@ -131,6 +147,7 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
                  priors_preloaded=bool(prior))
     total = 0
     embs: set[tuple[int, ...]] = set()
+    node_hist = np.zeros(HIST_BINS, dtype=np.int64)
 
     def consume(rows, alive, counts, st, phase: str):
         nonlocal total
@@ -139,6 +156,11 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
         stats[f"{phase}_count"] += c
         stats["bytes_fetch"] += float(st["bytes_fetch"])
         stats["bytes_verify"] += float(st["bytes_verify"])
+        stats["bytes_fetch_compressed"] += float(st["bytes_fetch_compressed"])
+        stats["bytes_saved_cache"] += float(st["bytes_saved_cache"])
+        stats["cache_hits"] += float(st["cache_hits"])
+        stats["cache_probes"] += float(st["cache_probes"])
+        hist_update(node_hist, st["seed_node_counts"])
         if return_embeddings:
             embs.update(extract_embeddings(np.asarray(rows),
                                            np.asarray(alive), pd, pg))
@@ -149,12 +171,21 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
     per_seed_cost = 4.0 * pattern.n
     if prior and prior.get("per_seed_cost"):
         per_seed_cost = max(float(prior["per_seed_cost"]), 1.0)
+    # priors v2: the persisted node_counts histogram sizes waves from a high
+    # percentile of the per-seed cost *distribution* (skew-aware), and the
+    # learned auto pipeline depth seeds the adaptive scheduler
+    prior_hist = prior.get("node_hist") if prior else None
+    prior_depth = prior.get("pipeline_depth") if prior else None
+    auto_start = prior_depth if cfg.pipeline_depth == "auto" else None
+    if prior_hist:
+        stats["prior_cost_p90"] = hist_percentile(prior_hist, 0.90)
     max_sme = max((len(s) for s in sme_seeds), default=0)
     if max_sme > 0:
         scap = 1 << (min(max_sme, 4096) - 1).bit_length()
         queues = [[np.asarray(s, dtype=np.int64)] if len(s) else []
                   for s in sme_seeds]
-        c = sched.run(queues, scap, local_only=True, phase="sme")
+        c = sched.run(queues, scap, local_only=True, phase="sme",
+                      auto_start=auto_start)
         if c is not None:
             per_seed_cost = max(c, 1.0)
 
@@ -180,11 +211,17 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
                                         seed=cfg.seed),
                 n_lazy_seeds=len(dist_seeds[t])))
         # static wave width from the grouping invariant (phi <= budget, one
-        # rollback slot) — groups cannot be sized without forming them all
-        max_g = int(float(cfg.region_group_budget) // max(per_seed_cost, 1.0))
+        # rollback slot) — groups cannot be sized without forming them all.
+        # With a persisted histogram the denominator is the p90 per-seed
+        # cost, not the mean: hub-heavy groups stop overflowing their wave.
+        size_cost = max(per_seed_cost, 1.0)
+        if prior_hist:
+            size_cost = max(size_cost, hist_percentile(prior_hist, 0.90))
+        max_g = int(float(cfg.region_group_budget) // size_cost)
         max_g = max(1, min(max_g + 1, max(len(s) for s in dist_seeds)))
         scap = 1 << (max_g - 1).bit_length()
-        c = sched.run(queues, scap, local_only=False, phase="dist")
+        c = sched.run(queues, scap, local_only=False, phase="dist",
+                      auto_start=auto_start)
         if c is not None:
             per_seed_cost = max(c, 1.0)
         stats["n_groups"] = max(q.n_formed for q in queues)
@@ -192,10 +229,18 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
     stats["final_caps"] = dict(frontier=runner.cfg.frontier_cap,
                                fetch=runner.cfg.fetch_cap,
                                verify=runner.cfg.verify_cap)
+    stats["cache_hit_rate"] = (stats["cache_hits"] / stats["cache_probes"]
+                               if stats["cache_probes"] else 0.0)
+    stats["node_hist"] = node_hist.tolist()
     if pkey:
-        save_priors(cfg.priors_path, pkey,
-                    dict(per_seed_cost=float(per_seed_cost),
-                         caps=stats["final_caps"]))
+        entry = dict(per_seed_cost=float(per_seed_cost),
+                     caps=stats["final_caps"],
+                     node_hist=node_hist.tolist())
+        if "auto_depth" in stats:
+            entry["pipeline_depth"] = int(stats["auto_depth"])
+        elif prior_depth:                 # keep the learned depth alive
+            entry["pipeline_depth"] = int(prior_depth)
+        save_priors(cfg.priors_path, pkey, entry)
     return EnumerationResult(count=total,
                              embeddings=embs if return_embeddings else None,
                              stats=stats)

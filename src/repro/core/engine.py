@@ -30,6 +30,16 @@ region-group waves (double-buffered exchanges).  :func:`run_rounds` remains
 as the synchronous composition of the stages; stage boundaries carry no
 semantics, so ``run_rounds == staged pipeline`` byte-for-byte.
 
+``fetch_stage`` additionally threads the optional device-resident
+foreign-adjacency cache (:class:`~repro.core.cache.AdjCache`): unique
+foreign pivots are probed *before* the a2a request is built (hits are
+masked off the wire), cached rows are merged over the responses after the
+exchange, and miss responses enter under the benefit-based admission rule
+— all inside the jitted stage, so cache state crosses stage and wave
+boundaries as a pytree with no host round-trips.  Cache state only changes
+which transport delivers a row, never its bytes, so enumeration results
+are cache-invariant.
+
 The engine reads adjacency exclusively through the pluggable
 :class:`~repro.graph.storage.DeviceGraph` interface (``rows_at``/``deg_at``
 over the stacked layout): the ``dense`` format is the seed's padded array,
@@ -55,6 +65,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.rads import EngineConfig
+from repro.core.cache import AdjCache, probe_dev
 from repro.core.exchange import (ExchangeBackend, compact,
                                  unique_ids, unique_pairs)
 from repro.core.plan import Plan
@@ -157,36 +168,97 @@ def build_plan_data(plan: Plan) -> PlanData:
 # --------------------------------------------------------------------------- #
 # fetchV / verifyE exchanges
 # --------------------------------------------------------------------------- #
-def _per_peer_compact(ids, mask, owners, ndev: int, cap_out: int, fill: int):
+def _per_peer_compact(ids, mask, owners, ndev: int, cap_out: int, fill: int,
+                      extras: tuple = ()):
     """Split a sorted id list into per-peer request buffers (ndev, cap_out).
-    Returns (reqs, counts, overflow); order within a peer stays sorted."""
+
+    ``extras``: ``(array, fill)`` pairs co-compacted with ``ids`` through
+    the same argsort (the cached fetch path routes hit flags / ways /
+    cached rows alongside the ids).  Returns ``(reqs, *extras_compacted,
+    counts, overflow)``; order within a peer stays sorted."""
     def one_peer(p):
         m = mask & (owners == p)
-        _, ov, out = compact(m, cap_out, ids, fill=fill)
-        return out, m.sum(), ov
+        _, ov, *outs = compact(
+            m, cap_out, ids, *(a for a, _ in extras),
+            fills=(fill, *(f for _, f in extras)))
+        return (*outs, m.sum(), ov)
 
-    reqs, counts, ovs = jax.vmap(one_peer)(jnp.arange(ndev))
-    return reqs, counts, jnp.any(ovs)
+    *outs, counts, ovs = jax.vmap(one_peer)(jnp.arange(ndev))
+    return (*outs, counts, jnp.any(ovs))
+
+
+def _varint_id_bytes(wire: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Modeled delta+varint size of the fetchV id payloads.
+
+    ``wire``: (ndev, peer, fcap) request buffers — ids ascending among the
+    valid (< n) entries, sentinel holes allowed (cache hits are masked to
+    ``n``).  Each peer stream is delta-coded against the previous valid id
+    (the first id absolute) and each delta LEB128-varint sized; returns the
+    per-(src, peer) byte matrix for
+    :meth:`~repro.core.exchange.ExchangeBackend.off_device_payload_bytes`.
+    """
+    valid = wire < n
+    run = jax.lax.cummax(jnp.where(valid, wire, -1), axis=wire.ndim - 1)
+    prev = jnp.concatenate(
+        [jnp.full(run[..., :1].shape, -1, run.dtype), run[..., :-1]], axis=-1)
+    delta = jnp.maximum(jnp.where(prev >= 0, wire - prev, wire), 0)
+    # deltas >= 2^28 would take 5 LEB128 bytes; the modeled format falls
+    # back to the raw 4-byte int32 for those (the escape tag is amortized
+    # into the varint sizes), so compressed <= raw 4B/id always holds
+    vlen = (1 + (delta >= 1 << 7).astype(jnp.int32)
+            + (delta >= 1 << 14).astype(jnp.int32)
+            + (delta >= 1 << 21).astype(jnp.int32))
+    return jnp.where(valid, vlen, 0).sum(-1)           # (ndev, peer)
 
 
 def fetch_exchange(g: DeviceGraph, exch: ExchangeBackend,
-                   pivots, need, fcap: int):
-    """Batched fetchV (§3.2 Expand): dedup foreign pivot ids, exchange,
-    answer with local adjacency rows, exchange back.
+                   pivots, need, fcap: int, cache: AdjCache | None = None):
+    """Batched fetchV (§3.2 Expand): dedup foreign pivot ids, probe the
+    adjacency cache, exchange the misses, answer with local adjacency rows,
+    exchange back, merge cached rows in, and admit the miss responses.
 
-    pivots/need: (ndev, cap). Returns (req_ids (ndev, ndev, fcap) sorted per
-    peer, fetched_adj (ndev, ndev, fcap, maxdeg), overflow, off_bytes)."""
-    ndev, stride, n = g.ndev, g.stride, g.n
+    pivots/need: (ndev, cap).  Returns ``(req_ids (ndev, ndev, fcap) sorted
+    per peer — hits included, so the expand-side searchsorted lookup is
+    cache-agnostic, fetched_adj (ndev, ndev, fcap, maxdeg) with cached rows
+    merged in, overflow, fstats, cache')`` where ``fstats`` carries the
+    per-call byte/hit accounting (``bytes_fetch`` counts only what actually
+    crossed the wire; ``bytes_saved_cache`` is the hit-masked remainder;
+    ``bytes_fetch_compressed`` models delta+varint id coding of the wire
+    payload).  With ``cache=None`` the request path is byte-identical to
+    the uncached engine and ``cache'`` is ``None``.
+    """
+    ndev, stride, n, D = g.ndev, g.stride, g.n, g.max_degree
     t_ids = jnp.arange(ndev)
+    use_cache = cache is not None
 
-    def build(t, pv, nd):
+    def build(t, pv, nd, ck=None, cr=None):
         foreign = nd & (pv // stride != t) & (pv < n)
         uids, umask = unique_ids(pv, foreign, n)
+        if use_cache:
+            hit, hway, crow = probe_dev(ck, cr, uids, n)
+            hit = hit & umask
+        else:
+            hit = jnp.zeros(uids.shape, bool)
+            hway = jnp.zeros(uids.shape, jnp.int32)
+            crow = jnp.full(uids.shape + (1,), n, jnp.int32)  # placeholder
         owners = jnp.clip(uids // stride, 0, ndev - 1)
-        return _per_peer_compact(uids, umask, owners, ndev, fcap, n)
+        return _per_peer_compact(uids, umask, owners, ndev, fcap, n,
+                                 extras=((hit, False), (hway, 0), (crow, n)))
 
-    reqs, counts, ov = jax.vmap(build)(t_ids, pivots, need)
-    recv = exch.a2a(reqs)                              # (ndev, src, fcap)
+    if use_cache:
+        (reqs, hit_c, way_c, crow_c, counts, ovs) = jax.vmap(
+            build)(t_ids, pivots, need, cache.keys, cache.rows)
+        # hits never cross the wire: mask them out of the a2a request
+        wire = jnp.where(hit_c, n, reqs)
+    else:
+        (reqs, hit_c, way_c, crow_c, counts, ovs) = jax.vmap(
+            build)(t_ids, pivots, need)
+        wire = reqs
+    # per-peer hit counts from the compacted flags: identical to the
+    # pre-compaction count for every *consumed* wave (an overflowing wave's
+    # stats are discarded at retire, so truncation never reaches them)
+    counts_hit = hit_c.sum(-1).astype(counts.dtype)
+    recv = exch.a2a(wire)                              # (ndev, src, fcap)
 
     def answer(t, rc):
         li = jnp.clip(rc - t * stride, 0, stride - 1)
@@ -195,9 +267,34 @@ def fetch_exchange(g: DeviceGraph, exch: ExchangeBackend,
 
     resp = jax.vmap(answer)(t_ids, recv)               # (ndev, src, fcap, D)
     fetched = exch.a2a(resp)                           # (ndev, peer, fcap, D)
+    if use_cache:
+        # merge cached rows over the (sentinel) responses of masked slots,
+        # then run the admission pass over this batch's probe outcomes
+        fetched = jnp.where(hit_c[..., None], crow_c, fetched)
+        cache = cache.updated(reqs.reshape(ndev, -1),
+                              hit_c.reshape(ndev, -1),
+                              way_c.reshape(ndev, -1),
+                              fetched.reshape(ndev, -1, D))
+
     # 4B request id + 4B * max_degree response row per off-device entry
-    off_bytes = exch.off_device_bytes(counts, 4 * (1 + g.max_degree))
-    return reqs, fetched, jnp.any(ov), off_bytes
+    elem = 4 * (1 + D)
+    full_bytes = exch.off_device_bytes(counts, elem)
+    wire_bytes = exch.off_device_bytes(counts - counts_hit, elem) \
+        if use_cache else full_bytes
+    comp_bytes = (exch.off_device_payload_bytes(_varint_id_bytes(wire, n))
+                  + exch.off_device_bytes(counts - counts_hit, 4.0 * D))
+    zero = jnp.zeros((), jnp.float32)
+    fstats = dict(
+        bytes_fetch=wire_bytes,
+        bytes_fetch_compressed=comp_bytes,
+        bytes_saved_cache=full_bytes - wire_bytes,
+        # probe/hit counters exist only when there is a cache to probe —
+        # a --no-cache run must audit as having zero cache activity
+        cache_hits=counts_hit.sum().astype(jnp.float32) if use_cache
+        else zero,
+        cache_probes=counts.sum().astype(jnp.float32) if use_cache
+        else zero)
+    return reqs, fetched, jnp.any(ovs), fstats, cache
 
 
 def verify_exchange(g: DeviceGraph, exch: ExchangeBackend,
@@ -356,15 +453,26 @@ class WaveState:
     jitted *per unit index* (each (unit, stage) pair has a distinct static
     shape).  ``pend_*`` (the EVI buffers, Def. 5) exist only on the
     expand→verify edge and are ``None`` elsewhere; ``rounds_alive`` grows by
-    one per-device count per completed unit."""
+    one per-device count per completed unit.
+
+    Byte counters are f32 scalars (x64 is disabled), exact up to 2^24
+    bytes *per wave* — per-wave traffic beyond ~16MB would round, and the
+    cache conservation law (``bytes_fetch + bytes_saved_cache`` == the
+    uncached ``bytes_fetch``) would then only hold approximately.  The
+    driver accumulates across waves in Python floats, so only the
+    single-wave total is bounded."""
 
     rows: jnp.ndarray            # (ndev, cap, width) partial embeddings
     alive: jnp.ndarray           # (ndev, cap) bool
     seed_slot: jnp.ndarray       # (ndev, cap) originating seed slot
     overflow: jnp.ndarray        # () bool — any capacity overflow so far
     lost: jnp.ndarray            # () bool — any dropped fetchV response
-    bytes_fetch: jnp.ndarray     # () f32 — off-device fetchV traffic
+    bytes_fetch: jnp.ndarray     # () f32 — off-device fetchV wire traffic
     bytes_verify: jnp.ndarray    # () f32 — off-device verifyE traffic
+    bytes_fetch_compressed: jnp.ndarray  # () f32 — modeled delta+varint wire
+    bytes_saved_cache: jnp.ndarray       # () f32 — fetchV bytes hit-masked
+    cache_hits: jnp.ndarray      # () f32 — unique foreign ids served by cache
+    cache_probes: jnp.ndarray    # () f32 — unique foreign ids requested
     node_counts: jnp.ndarray     # (ndev, scap) trie nodes per seed (§6 calib)
     rounds_alive: tuple = ()     # per-unit (ndev,) alive counts
     pend_a: jnp.ndarray | None = None   # (ndev, cap, K) EVI endpoint a
@@ -374,6 +482,8 @@ class WaveState:
     def tree_flatten(self):
         return ((self.rows, self.alive, self.seed_slot, self.overflow,
                  self.lost, self.bytes_fetch, self.bytes_verify,
+                 self.bytes_fetch_compressed, self.bytes_saved_cache,
+                 self.cache_hits, self.cache_probes,
                  self.node_counts, self.rounds_alive,
                  self.pend_a, self.pend_b, self.pend_m), None)
 
@@ -396,6 +506,10 @@ def init_wave(g: DeviceGraph, seeds, seed_mask) -> WaveState:
         lost=jnp.zeros((), bool),
         bytes_fetch=jnp.zeros((), jnp.float32),
         bytes_verify=jnp.zeros((), jnp.float32),
+        bytes_fetch_compressed=jnp.zeros((), jnp.float32),
+        bytes_saved_cache=jnp.zeros((), jnp.float32),
+        cache_hits=jnp.zeros((), jnp.float32),
+        cache_probes=jnp.zeros((), jnp.float32),
         node_counts=jnp.zeros((ndev, scap), jnp.int32))
 
 
@@ -406,20 +520,29 @@ def unit_evi_width(pd: PlanData, ui: int) -> int:
 
 def fetch_stage(g: DeviceGraph, pd: PlanData, cfg: EngineConfig,
                 exch: ExchangeBackend, ui: int, state: WaveState,
-                local_only: bool):
-    """Pipeline stage 1 of unit ``ui``: batched fetchV on the unit pivot.
+                local_only: bool, cache: AdjCache | None = None):
+    """Pipeline stage 1 of unit ``ui``: batched fetchV on the unit pivot,
+    with the foreign-adjacency cache probed before and fed after the a2a.
 
-    Returns ``(state', bufs)`` where ``bufs = (req_ids, fetched)`` feeds
-    ``expand_stage`` (``None`` in SM-E mode — no collectives at all)."""
+    Returns ``(state', bufs, cache')`` where ``bufs = (req_ids, fetched)``
+    feeds ``expand_stage`` (``None`` in SM-E mode — no collectives at all)
+    and ``cache'`` is the post-admission cache state the caller threads
+    into the next fetch (``None`` stays ``None``)."""
     if local_only:
-        return state, None
+        return state, None, cache
     piv_col = pd.unit_piv_cols[ui]
-    req_ids, fetched, f_ov, f_b = fetch_exchange(
+    req_ids, fetched, f_ov, fs, cache = fetch_exchange(
         g, exch, state.rows[:, :, piv_col], state.alive,
-        cfg.fetch_cap)
-    state = replace(state, overflow=state.overflow | f_ov,
-                    bytes_fetch=state.bytes_fetch + f_b)
-    return state, (req_ids, fetched)
+        cfg.fetch_cap, cache)
+    state = replace(
+        state, overflow=state.overflow | f_ov,
+        bytes_fetch=state.bytes_fetch + fs["bytes_fetch"],
+        bytes_fetch_compressed=(state.bytes_fetch_compressed
+                                + fs["bytes_fetch_compressed"]),
+        bytes_saved_cache=state.bytes_saved_cache + fs["bytes_saved_cache"],
+        cache_hits=state.cache_hits + fs["cache_hits"],
+        cache_probes=state.cache_probes + fs["cache_probes"])
+    return state, (req_ids, fetched), cache
 
 
 def expand_stage(g: DeviceGraph, pd: PlanData, cfg: EngineConfig,
@@ -485,6 +608,10 @@ def finalize_wave(state: WaveState):
     counts = state.alive.sum(axis=-1)
     stats = dict(bytes_fetch=state.bytes_fetch,
                  bytes_verify=state.bytes_verify,
+                 bytes_fetch_compressed=state.bytes_fetch_compressed,
+                 bytes_saved_cache=state.bytes_saved_cache,
+                 cache_hits=state.cache_hits,
+                 cache_probes=state.cache_probes,
                  rows_per_round=jnp.stack(state.rounds_alive),
                  node_counts=state.node_counts)
     return (state.rows, state.alive, counts,
@@ -495,15 +622,22 @@ def finalize_wave(state: WaveState):
 # Full multi-round run (synchronous composition of the stages)
 # --------------------------------------------------------------------------- #
 def run_rounds(g: DeviceGraph, pd: PlanData, cfg: EngineConfig,
-               exch: ExchangeBackend, seeds, seed_mask, local_only: bool):
+               exch: ExchangeBackend, seeds, seed_mask, local_only: bool,
+               cache: AdjCache | None = None):
     """Traceable core: all units, all leaves, exchanges per round.
 
     seeds: (ndev, scap) global vertex ids.  Returns (rows, alive, counts,
     complete, stats).  This is exactly ``fetch→expand→verify`` per unit —
-    the async scheduler runs the same stages, interleaved across waves."""
+    the async scheduler runs the same stages, interleaved across waves,
+    with the (optional) adjacency cache threaded through the fetches.
+    The cache is per-call here: the post-run state is discarded (the
+    classic return tuple is kept), so cross-wave cache warmth is the
+    :class:`~repro.core.scheduler.StageRunner`'s job — ``run_rounds ==
+    staged pipeline`` holds for results, not for cache temperature."""
     state = init_wave(g, seeds, seed_mask)
     for ui in range(len(pd.unit_steps)):
-        state, bufs = fetch_stage(g, pd, cfg, exch, ui, state, local_only)
+        state, bufs, cache = fetch_stage(g, pd, cfg, exch, ui, state,
+                                         local_only, cache)
         state = expand_stage(g, pd, cfg, ui, state, bufs, local_only)
         state = verify_stage(g, pd, cfg, exch, ui, state, local_only)
     return finalize_wave(state)

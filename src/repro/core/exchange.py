@@ -73,6 +73,17 @@ class ExchangeBackend:
         off = counts * (1 - jnp.eye(ndev, dtype=counts.dtype))
         return off.sum().astype(jnp.float32) * elem_bytes
 
+    def off_device_payload_bytes(self, byte_matrix: jnp.ndarray
+                                 ) -> jnp.ndarray:
+        """Like :meth:`off_device_bytes` for *pre-summed* per-peer byte
+        matrices (``byte_matrix[t, p]`` = payload bytes ``t`` sends to
+        ``p``) — used when entries have variable size, e.g. the modeled
+        delta+varint coding of fetchV id payloads.  The diagonal
+        (self-traffic) is free, identically on every built-in backend."""
+        ndev = byte_matrix.shape[0]
+        off = byte_matrix * (1 - jnp.eye(ndev, dtype=byte_matrix.dtype))
+        return off.sum().astype(jnp.float32)
+
 
 _BACKENDS: dict[str, type[ExchangeBackend]] = {}
 
@@ -175,11 +186,13 @@ class SpmdExchange(ExchangeBackend):
 # Static-shape primitives shared by the engines
 # --------------------------------------------------------------------------- #
 def compact(mask: jnp.ndarray, cap_out: int, *arrays: jnp.ndarray,
-            fill: int = 0) -> tuple:
+            fill: int = 0, fills: tuple | None = None) -> tuple:
     """Stable-compact rows where ``mask`` is True into ``cap_out`` slots.
 
     Returns (new_mask (cap_out,), overflow (bool), *gathered arrays). Rows
     beyond cap_out are dropped and flagged.  Per-device (no leading axis).
+    ``fills`` overrides ``fill`` per array (one entry per array) so
+    heterogeneous columns — ids, flags, payload rows — share one argsort.
     """
     n = mask.shape[0]
     order = jnp.argsort(~mask, stable=True)
@@ -188,11 +201,13 @@ def compact(mask: jnp.ndarray, cap_out: int, *arrays: jnp.ndarray,
     count = mask.sum()
     new_mask = jnp.arange(cap_out) < jnp.minimum(count, cap_out)
     overflow = count > cap_out
+    if fills is None:
+        fills = (fill,) * len(arrays)
     outs = []
-    for a in arrays:
+    for a, fl in zip(arrays, fills):
         g = a[take]
         g = jnp.where(
-            new_mask.reshape((-1,) + (1,) * (g.ndim - 1)), g, fill)
+            new_mask.reshape((-1,) + (1,) * (g.ndim - 1)), g, fl)
         outs.append(g)
     return (new_mask, overflow, *outs)
 

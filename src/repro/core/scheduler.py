@@ -54,6 +54,7 @@ import jax
 import numpy as np
 
 from repro.configs.rads import EngineConfig
+from repro.core.cache import AdjCache, build_cache
 from repro.core.engine import (PlanData, WaveState, expand_stage,
                                fetch_stage, finalize_wave, init_wave,
                                verify_stage)
@@ -134,15 +135,28 @@ class StageRunner:
     """Holds the on-device graph (any registered ``DeviceGraph`` format)
     plus a lazily-built cache of jitted stage functions keyed by
     ``(stage, unit, local_only)``; capacity escalation doubles the engine
-    caps and clears the cache (re-jit).  The graph travels through the
+    caps and clears the jit cache (re-jit).  The graph travels through the
     jitted stages as a pytree argument, so sharded (spmd) and device-local
-    formats use the same code path."""
+    formats use the same code path.
+
+    The runner also *owns* the foreign-adjacency cache state
+    (:class:`~repro.core.cache.AdjCache`): every dispatched ``fetch_stage``
+    consumes ``self.cache`` and replaces it with the post-admission state
+    (futures — JAX async keeps the host loop non-blocking), sequencing the
+    cache through fetches in dispatch order across waves *and* across the
+    capacity-escalation re-jits (cache geometry is independent of the
+    engine capacities, so escalation re-traces the stages around the same
+    cache arrays).  Pass ``cache=`` explicitly to share or shard a
+    prebuilt cache (the spmd driver does); the default builds one from
+    ``cfg`` (``None`` when disabled)."""
 
     def __init__(self, g: DeviceGraph, pd: PlanData,
-                 cfg: EngineConfig, exch: ExchangeBackend):
+                 cfg: EngineConfig, exch: ExchangeBackend,
+                 cache: AdjCache | None | str = "auto"):
         self.g = g
         self.pd, self.exch = pd, exch
         self.cfg = cfg
+        self.cache = build_cache(cfg, g) if cache == "auto" else cache
         self._fns: dict = {}
 
     @property
@@ -176,9 +190,13 @@ class StageRunner:
         if local_only:                       # SM-E: no collectives at all
             return state, None
         pd, cfg, exch = self.pd, self.cfg, self.exch
+        # cache=None is a valid (empty) pytree argument, so one closure
+        # serves both the cached and the uncached configuration
         fn = self._get(("fetch", ui), lambda: jax.jit(
-            lambda gg, s: fetch_stage(gg, pd, cfg, exch, ui, s, False)))
-        return fn(self.g, state)
+            lambda gg, s, c: fetch_stage(gg, pd, cfg, exch, ui, s,
+                                         False, c)))
+        state, bufs, self.cache = fn(self.g, state, self.cache)
+        return state, bufs
 
     def expand(self, ui: int, state: WaveState, bufs, local_only: bool):
         pd, cfg = self.pd, self.cfg
@@ -294,15 +312,18 @@ class PipelineScheduler:
                 retry.append([b[len(b) // 2:] for b in w.batches])
                 retry.append([b[:len(b) // 2] for b in w.batches])
             return 0.0, 0
+        # per-real-seed trie-node counts (padding slots masked) — consumers
+        # use these for the persisted node_counts histogram (priors v2)
+        nc = np.asarray(st["node_counts"])[w.mask]
+        st["seed_node_counts"] = nc
         self.consume(rows, alive, counts, st, phase)
         self.stats["wave_s_total"] += time.perf_counter() - w.t_start
-        nc = np.asarray(st["node_counts"])[w.mask]
         return float(nc.sum()), int(nc.size)
 
     # -- main loop ----------------------------------------------------------- #
     def run(self, queues, scap: int,
-            local_only: bool, phase: str, depth=None
-            ) -> float | None:
+            local_only: bool, phase: str, depth=None,
+            auto_start: int | None = None) -> float | None:
         """Process per-device group queues (GroupQueue instances or plain
         lists of seed arrays) until empty.  Returns the mean trie-node cost
         per completed seed (running mean over *all* waves).
@@ -317,11 +338,17 @@ class PipelineScheduler:
         *achieved*.  When it saturates the current depth the limit rises
         (up to ``_MAX_AUTO_DEPTH``); when waves stop overlapping (uniform
         runtimes, single surviving queue) it falls back toward synchronous —
-        all host-side, so adaptation never recompiles a stage."""
+        all host-side, so adaptation never recompiles a stage.
+        ``auto_start`` seeds the adaptive depth (the priors cache passes the
+        depth a previous run on the same workload converged to)."""
         if depth is None:
             depth = self.runner.cfg.pipeline_depth
         auto = depth == "auto"               # the "auto" setting
-        depth = _AUTO_START_DEPTH if auto else max(1, int(depth))
+        if auto:
+            depth = int(auto_start) if auto_start else _AUTO_START_DEPTH
+            depth = max(1, min(depth, _MAX_AUTO_DEPTH))
+        else:
+            depth = max(1, int(depth))
         queues = [q if isinstance(q, GroupQueue) else GroupQueue(q)
                   for q in queues]
         retry: list[list[np.ndarray]] = []
@@ -373,6 +400,8 @@ class PipelineScheduler:
                     elif achieved < depth - 1.25 and depth > 1:
                         depth -= 1
                     self.stats["auto_depth"] = depth
+        if auto:
+            self.stats["auto_depth"] = depth     # persisted via priors v2
         self.stats[f"{phase}_pipeline_s"] = (
             self.stats.get(f"{phase}_pipeline_s", 0.0)
             + time.perf_counter() - t0)

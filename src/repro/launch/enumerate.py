@@ -31,6 +31,15 @@ def main():
     ap.add_argument("--pallas", action="store_true",
                     help="Pallas kernels: membership in back-edge checks, "
                          "intersect in bucketed candidate generation")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the device-resident foreign-adjacency "
+                         "cache (core/cache.py)")
+    ap.add_argument("--cache-slots", type=int, default=None,
+                    help="cache sets per device (power of two; default "
+                         f"{DEFAULT_ENGINE.cache_slots})")
+    ap.add_argument("--cache-ways", type=int, default=None,
+                    help="cache associativity (1 = direct-mapped; default "
+                         f"{DEFAULT_ENGINE.cache_ways})")
     ap.add_argument("--priors", default="",
                     help="JSON cache of per-(pattern, graph) capacity/cost "
                          "priors; preloaded before and updated after the run")
@@ -54,6 +63,13 @@ def main():
                               steal_from_longest=not args.no_steal_groups,
                               use_pallas_kernels=args.pallas,
                               storage_format=args.storage,
+                              enable_cache=not args.no_cache,
+                              cache_slots=(args.cache_slots
+                                           if args.cache_slots is not None
+                                           else DEFAULT_ENGINE.cache_slots),
+                              cache_ways=(args.cache_ways
+                                          if args.cache_ways is not None
+                                          else DEFAULT_ENGINE.cache_ways),
                               priors_path=args.priors)
     mesh = None
     if args.mode == "spmd":
@@ -72,6 +88,15 @@ def main():
     print(f"[enum] storage {st['storage_format']}: "
           f"adj {st['peak_adj_bytes'] / 1e6:.2f}MB on device | "
           f"priors preloaded {st['priors_preloaded']}")
+    if st["cache_enabled"]:
+        print(f"[enum] cache {cfg.cache_slots}x{cfg.cache_ways}: "
+              f"hit-rate {st['cache_hit_rate']:.3f} "
+              f"({st['cache_hits']:.0f}/{st['cache_probes']:.0f} probes) | "
+              f"saved {st['bytes_saved_cache']/1e6:.2f}MB | "
+              f"varint fetch {st['bytes_fetch_compressed']/1e6:.2f}MB | "
+              f"resident {st['cache_bytes']/1e6:.2f}MB")
+    else:
+        print("[enum] cache disabled")
     print(f"[enum] pipeline: depth {st['pipeline_depth']}"
           f"{' (auto->%d)' % st['auto_depth'] if 'auto_depth' in st else ''} | "
           f"{st['n_waves']} waves, max {st['max_inflight_waves']} in flight | "

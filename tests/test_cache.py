@@ -1,0 +1,304 @@
+"""Device-resident foreign-adjacency cache (core/cache.py AdjCache):
+
+* unit-level hit/miss bookkeeping and the benefit-based admission /
+  eviction order (frequency × row size, aging on rejected candidates),
+* cache-on == cache-off == oracle across exchange backends and storage
+  formats, with the exact conservation law
+  ``bytes_fetch(on) + bytes_saved_cache == bytes_fetch(off)``,
+* hit-rate > 0 (and ``bytes_fetch`` strictly smaller) on a power-law
+  graph driven through repeated region-group waves,
+* the acceptance bar: >= 25% fetchV wire-byte reduction on the
+  n=4096 / avg_deg=8 power-law graph with >= 2 distributed waves,
+* cache state surviving capacity-escalation re-jits, sync == async
+  counts, and the EngineConfig knob validation.
+
+(spmd parity for the cache runs in the slow multi-device subprocess
+suite, test_multidevice.py.)
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.rads import QUERIES, EngineConfig
+from repro.core import (Pattern, canonicalize, enumerate_oracle,
+                        rads_enumerate)
+from repro.core.cache import AdjCache, probe_dev
+from repro.graph import partition, powerlaw_graph
+
+# hash partition + enable_sme=False is the communication-heavy setting:
+# every seed is distributed and ~3/4 of pivots are foreign.  Small caps
+# keep the per-unit stage compiles cheap (the suite's cost is XLA compile
+# time, not wave execution).
+CFG = EngineConfig(frontier_cap=1 << 11, fetch_cap=256, verify_cap=1024,
+                   region_group_budget=192, enable_sme=False,
+                   cache_slots=512)
+
+
+@pytest.fixture(scope="module")
+def skewed():
+    g = powerlaw_graph(192, 8, seed=2)
+    return g, partition(g, 4, method="hash")
+
+
+# --------------------------------------------------------------------------- #
+# Config knobs
+# --------------------------------------------------------------------------- #
+def test_config_validates_cache_knobs():
+    EngineConfig(cache_slots=1 << 8, cache_ways=1)        # fine
+    with pytest.raises(ValueError, match="power of two"):
+        EngineConfig(cache_slots=100)
+    with pytest.raises(ValueError, match="power of two"):
+        EngineConfig(cache_slots=0)
+    with pytest.raises(ValueError, match="cache_ways"):
+        EngineConfig(cache_ways=0)
+
+
+# --------------------------------------------------------------------------- #
+# Unit level: probe / admission bookkeeping
+# --------------------------------------------------------------------------- #
+def _mk(slots=8, ways=2, n=64, width=4):
+    return AdjCache.build(ndev=1, slots=slots, ways=ways, n=n,
+                          line_width=width)
+
+
+def _rows_for(ids, n, width):
+    """Deterministic fake adjacency row for vertex v: [v+1, n, n, ...]."""
+    r = np.full((len(ids), width), n, np.int32)
+    r[:, 0] = np.asarray(ids) + 1
+    return jnp.asarray(r)
+
+
+def _feed(c, ids, n):
+    """One probe+update round over ``ids``; returns (cache', hit mask)."""
+    ids = jnp.asarray(np.asarray(ids, np.int32))
+    hit, way, crow = probe_dev(c.keys[0], c.rows[0], ids, n)
+    rows = jnp.where(hit[:, None], crow, _rows_for(ids, n, c.line_width))
+    c = c.updated(ids[None], hit[None], way[None], rows[None])
+    return c, np.asarray(hit)
+
+
+def test_probe_hit_miss_bookkeeping():
+    n = 64
+    c = _mk(n=n)                               # slots=8: sets 3, 4, 5
+    c, hit = _feed(c, [3, 12, 5], n)
+    assert not hit.any()                       # cold cache: all misses
+    c, hit = _feed(c, [3, 12, 7], n)
+    assert list(hit) == [True, True, False]    # admitted lines now hit
+    # a hit returns the exact payload row inserted for that id
+    h, _, row = probe_dev(c.keys[0], c.rows[0], jnp.asarray([12]), n)
+    assert bool(h[0]) and int(row[0, 0]) == 13
+    # sentinel ids never hit (and never insert)
+    c, hit = _feed(c, [n], n)
+    assert not hit.any()
+    h, _, _ = probe_dev(c.keys[0], c.rows[0], jnp.asarray([n]), n)
+    assert not bool(h[0])
+
+
+def test_one_insert_per_set_per_batch():
+    """Candidates of one set all pick the same (pre-update argmin) victim
+    way, so a single batch admits at most one of them — the smallest id on
+    equal benefit; the loser lands on a later batch via the empty way."""
+    n = 64
+    c = _mk(slots=8, ways=2, n=n)
+    c, _ = _feed(c, [3, 11], n)                # same set (3 % 8 == 11 % 8)
+    hit, _, _ = probe_dev(c.keys[0], c.rows[0], jnp.asarray([3, 11]), n)
+    assert list(np.asarray(hit)) == [True, False]
+    c, _ = _feed(c, [11], n)                   # retry fills the empty way
+    hit, _, _ = probe_dev(c.keys[0], c.rows[0], jnp.asarray([3, 11]), n)
+    assert list(np.asarray(hit)) == [True, True]
+
+
+def test_set_associativity_and_direct_mapped():
+    n = 64
+    # ways=2: two ids in the same set (8 apart with slots=8) coexist
+    c = _mk(slots=8, ways=2, n=n)
+    c, _ = _feed(c, [1], n)
+    c, _ = _feed(c, [9], n)
+    c, hit = _feed(c, [1, 9], n)
+    assert hit.all()
+    # ways=1 degenerates to direct-mapped: the second id evicts the first
+    c1 = _mk(slots=8, ways=1, n=n)
+    c1, _ = _feed(c1, [1], n)
+    c1, _ = _feed(c1, [9], n)
+    hit9, _, _ = probe_dev(c1.keys[0], c1.rows[0], jnp.asarray([9]), n)
+    hit1, _, _ = probe_dev(c1.keys[0], c1.rows[0], jnp.asarray([1]), n)
+    assert bool(hit9[0]) and not bool(hit1[0])
+
+
+def test_benefit_eviction_prefers_cold_line():
+    """The paper's benefit rule: the frequently-hit line survives, the cold
+    one is the victim when a new candidate arrives into a full set."""
+    n = 64
+    c = _mk(slots=1, ways=2, n=n)              # one set, two lines
+    c, _ = _feed(c, [1], n)
+    c, _ = _feed(c, [2], n)                    # set now full: {1, 2}
+    for _ in range(4):                         # heat line 1
+        c, hit = _feed(c, [1], n)
+        assert hit.all()
+    # new candidates age the cold victim (line 2) until one is admitted
+    for cand in (3, 4):
+        c, _ = _feed(c, [cand], n)
+    keys = set(int(k) for k in np.asarray(c.keys).ravel())
+    assert 1 in keys                           # hot line survived
+    assert 2 not in keys                       # cold line was evicted
+
+
+def test_benefit_prefers_large_rows():
+    """Size is part of the benefit score: a long-row candidate is admitted
+    over a short-row resident, not vice versa."""
+    n, width = 64, 8
+    c = AdjCache.build(ndev=1, slots=1, ways=1, n=n, line_width=width)
+    short = np.full((1, width), n, np.int32)
+    short[0, 0] = 9                            # deg 1 => benefit 2
+    long_ = np.full((1, width), n, np.int32)
+    long_[0, :] = np.arange(width)             # deg 8 => benefit 9
+    ids = jnp.asarray([5], jnp.int32)
+    no_hit = jnp.zeros((1, 1), bool)
+    way0 = jnp.zeros((1, 1), jnp.int32)
+    c = c.updated(ids[None], no_hit, way0, jnp.asarray(short)[None])
+    c = c.updated(jnp.asarray([7], jnp.int32)[None], no_hit, way0,
+                  jnp.asarray(long_)[None])
+    assert int(c.keys[0, 0, 0]) == 7           # big row won the contest
+
+
+# --------------------------------------------------------------------------- #
+# Engine level: parity, accounting, hit rates
+# --------------------------------------------------------------------------- #
+def test_cache_on_off_oracle_parity_matrix(skewed):
+    """cache-on == cache-off == oracle for sim and gather across both
+    storage formats, with the exact byte conservation law and identical
+    accounting across backends/formats (spmd runs in the slow suite)."""
+    g, pg = skewed
+    pat = Pattern.from_edges(QUERIES["q1"])
+    oracle = canonicalize(enumerate_oracle(g, pat), pat)
+    on_key = off_key = None
+    for fmt in ("dense", "bucketed"):
+        for mode in ("sim", "gather"):
+            cfg = dataclasses.replace(CFG, storage_format=fmt)
+            on = rads_enumerate(pg, pat, cfg, mode=mode)
+            off = rads_enumerate(
+                pg, pat, dataclasses.replace(cfg, enable_cache=False),
+                mode=mode)
+            assert canonicalize(on.embeddings, pat) == oracle, (fmt, mode)
+            assert canonicalize(off.embeddings, pat) == oracle, (fmt, mode)
+            assert on.count == off.count
+            # conservation: what the cache saved is exactly what the
+            # uncached engine puts on the wire
+            assert (on.stats["bytes_fetch"] + on.stats["bytes_saved_cache"]
+                    == off.stats["bytes_fetch"]), (fmt, mode)
+            assert not off.stats["cache_enabled"]
+            assert off.stats["bytes_saved_cache"] == 0.0
+            assert on.stats["cache_probes"] > 0
+            # deterministic across backends and formats (identical wave
+            # schedule => identical cache state sequence)
+            k_on = (on.count, on.stats["bytes_fetch"],
+                    on.stats["cache_hits"], on.stats["cache_probes"])
+            k_off = (off.count, off.stats["bytes_fetch"])
+            on_key = on_key or k_on
+            off_key = off_key or k_off
+            assert k_on == on_key, (fmt, mode)
+            assert k_off == off_key, (fmt, mode)
+
+
+def test_multiround_hits_and_escalation_survival():
+    """The multi-unit q3 workload refetches pivots across rounds, waves,
+    and overflow retries: the cache must produce hits and a *strictly*
+    smaller ``bytes_fetch``, stay oracle-exact through the capacity
+    escalations this tiny config forces (the cache pytree threads through
+    every re-jit), and honour the byte conservation law."""
+    g = powerlaw_graph(128, 6, seed=2)
+    pg = partition(g, 4, method="hash")
+    pat = Pattern.from_edges(QUERIES["q3"])
+    oracle = canonicalize(enumerate_oracle(g, pat), pat)
+    cfg = EngineConfig(frontier_cap=512, fetch_cap=128, verify_cap=512,
+                       region_group_budget=256, enable_sme=False,
+                       cache_slots=256)
+    on = rads_enumerate(pg, pat, cfg, mode="sim")
+    off = rads_enumerate(pg, pat,
+                         dataclasses.replace(cfg, enable_cache=False),
+                         mode="sim")
+    assert canonicalize(on.embeddings, pat) == oracle
+    assert canonicalize(off.embeddings, pat) == oracle
+    assert on.count == off.count
+    st = on.stats
+    assert st["n_waves"] >= 2
+    assert st["cap_escalations"] >= 1          # cache crossed >= 1 re-jit
+    assert st["cache_probes"] > 0
+    assert st["cache_hits"] > 0
+    assert 0.0 < st["cache_hit_rate"] <= 1.0
+    assert st["bytes_saved_cache"] > 0.0
+    assert st["cache_enabled"] and st["cache_bytes"] > 0
+    assert st["bytes_fetch"] < off.stats["bytes_fetch"]
+    assert (st["bytes_fetch"] + st["bytes_saved_cache"]
+            == off.stats["bytes_fetch"])
+
+
+def test_bytes_fetch_compressed_accounting(skewed):
+    """The modeled delta+varint id coding never exceeds the raw 4B/id
+    accounting and is reported for cache-on and cache-off alike."""
+    g, pg = skewed
+    pat = Pattern.from_edges(QUERIES["q1"])
+    for cache_on in (True, False):
+        cfg = dataclasses.replace(CFG, enable_cache=cache_on)
+        res = rads_enumerate(pg, pat, cfg, mode="sim")
+        assert res.stats["bytes_fetch_compressed"] > 0.0
+        assert (res.stats["bytes_fetch_compressed"]
+                <= res.stats["bytes_fetch"])
+
+
+def test_sync_equals_async_with_cache(skewed):
+    """Counts and embeddings are cache-invariant under any pipeline depth
+    (wire traffic is schedule-dependent by design — a warmer cache serves
+    more hits — but results never are)."""
+    g, pg = skewed
+    pat = Pattern.from_edges(QUERIES["q1"])
+    sync = rads_enumerate(pg, pat,
+                          dataclasses.replace(CFG, pipeline_depth=1),
+                          mode="sim")
+    anc = rads_enumerate(pg, pat, CFG, mode="sim")
+    assert sync.count == anc.count
+    assert canonicalize(sync.embeddings, pat) == canonicalize(
+        anc.embeddings, pat)
+
+
+def test_direct_mapped_engine_parity(skewed):
+    """ways=1 (the degenerate direct-mapped cache) stays oracle-exact."""
+    g, pg = skewed
+    pat = Pattern.from_edges(QUERIES["q1"])
+    oracle = canonicalize(enumerate_oracle(g, pat), pat)
+    cfg = dataclasses.replace(CFG, cache_ways=1, cache_slots=128)
+    res = rads_enumerate(pg, pat, cfg, mode="sim")
+    assert canonicalize(res.embeddings, pat) == oracle
+
+
+@pytest.mark.slow
+def test_acceptance_powerlaw_4096_bytes_drop():
+    """Acceptance bar: on the n=4096 / avg_deg=8 power-law graph with
+    >= 2 distributed region-group waves, enabling the cache cuts
+    ``bytes_fetch`` by >= 25% while counts stay identical (and equal to an
+    independent triangle count)."""
+    g = powerlaw_graph(4096, 8, seed=1)
+    pg = partition(g, 4, method="hash")      # worst-case communication
+    pat = Pattern.from_edges(QUERIES["q1"])
+    cfg = EngineConfig(frontier_cap=1 << 14, fetch_cap=1 << 12,
+                       verify_cap=1 << 13, region_group_budget=1 << 12,
+                       enable_sme=False)
+    on = rads_enumerate(pg, pat, cfg, mode="sim", return_embeddings=False)
+    off = rads_enumerate(pg, pat,
+                         dataclasses.replace(cfg, enable_cache=False),
+                         mode="sim", return_embeddings=False)
+    assert on.stats["n_waves"] >= 2
+    assert on.count == off.count
+    # independent triangle count: sum over edges of |N(u) cap N(v)| / 3
+    tri = 0
+    for v in range(g.n):
+        nv = g.neighbors(v)
+        for w in nv[nv > v]:
+            tri += np.intersect1d(nv, g.neighbors(w)).size
+    assert on.count == tri // 3
+    assert off.stats["bytes_fetch"] > 0
+    saved = 1.0 - on.stats["bytes_fetch"] / off.stats["bytes_fetch"]
+    assert saved >= 0.25, (on.stats["bytes_fetch"],
+                           off.stats["bytes_fetch"])

@@ -153,3 +153,20 @@ def test_off_device_bytes_comparable_across_backends():
                 Exchange("spmd", mesh=make_engine_mesh(1))]
     for ex in backends:
         assert float(ex.off_device_bytes(counts, 9)) == want
+
+
+def test_off_device_payload_bytes_and_varint_model():
+    """Variable-size payload accounting (the modeled delta+varint fetchV id
+    coding): the diagonal stays free and the per-peer byte matrix is summed
+    as-is; the varint model sizes sorted-with-holes id streams correctly."""
+    from repro.core.engine import _varint_id_bytes
+
+    bm = jnp.array([[10.0, 3.0], [4.0, 20.0]])
+    assert float(Exchange("sim").off_device_payload_bytes(bm)) == 3.0 + 4.0
+    # one stream: first id absolute (200 -> 2 bytes), then deltas 1 and
+    # 16000 (1 and 2 bytes); sentinel holes (n=10**6) contribute nothing
+    n = 10 ** 6
+    wire = jnp.array([[[200, 201, n, 16201, n]]], dtype=jnp.int32)
+    got = _varint_id_bytes(wire, n)
+    assert got.shape == (1, 1)
+    assert int(got[0, 0]) == 2 + 1 + 2

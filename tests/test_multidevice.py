@@ -1,7 +1,8 @@
 """Multi-device correctness via subprocess (8 forced host devices):
 * SPMD engine (real all_to_all under shard_map) == sim engine == oracle,
   across both DeviceGraph storage formats (dense / bucketed) incl. a
-  skewed power-law graph
+  skewed power-law graph, with foreign-adjacency-cache on/off parity
+  (identical counts, sim==spmd hit accounting, byte conservation)
 * sharded train step == single-device train step
 * compressed_psum == plain psum within quantization error
 Each test spawns one python subprocess so the main pytest process keeps the
@@ -23,7 +24,7 @@ def run_sub(code: str) -> dict:
                XLA_FLAGS="--xla_force_host_platform_device_count=8",
                PYTHONPATH=SRC)
     out = subprocess.run([sys.executable, "-c", code], env=env,
-                         capture_output=True, text=True, timeout=900)
+                         capture_output=True, text=True, timeout=1800)
     assert out.returncode == 0, out.stderr[-3000:]
     return json.loads(out.stdout.strip().splitlines()[-1])
 
@@ -78,10 +79,34 @@ def test_spmd_engine_matches_oracle():
         spmd = rads_enumerate(pg, pat, many, mode='spmd', mesh=mesh)
         ok &= canonicalize(spmd.embeddings, pat) == oracle
         inflight = spmd.stats['max_inflight_waves']
-        print(json.dumps(dict(ok=bool(ok), inflight=int(inflight))))
+        # adjacency-cache parity through the sharded (shard_map) path:
+        # cache-on == cache-off == oracle, the sim/spmd hit accounting is
+        # identical (same host wave schedule), and the conservation law
+        # bytes_fetch(on) + bytes_saved_cache == bytes_fetch(off) holds
+        pat = Pattern.from_edges(QUERIES['q3'])
+        oracle = canonicalize(enumerate_oracle(gp, pat), pat)
+        ccfg = dataclasses.replace(cfg, enable_sme=False,
+                                   region_group_budget=256,
+                                   storage_format='bucketed')
+        c_on = rads_enumerate(pgp, pat, ccfg, mode='spmd', mesh=mesh)
+        c_off = rads_enumerate(
+            pgp, pat, dataclasses.replace(ccfg, enable_cache=False),
+            mode='spmd', mesh=mesh)
+        c_sim = rads_enumerate(pgp, pat, ccfg, mode='sim')
+        ok &= canonicalize(c_on.embeddings, pat) == oracle
+        ok &= canonicalize(c_off.embeddings, pat) == oracle
+        ok &= c_on.count == c_off.count == c_sim.count
+        ok &= (c_on.stats['bytes_fetch'] + c_on.stats['bytes_saved_cache']
+               == c_off.stats['bytes_fetch'])
+        ok &= c_on.stats['cache_hits'] == c_sim.stats['cache_hits']
+        ok &= c_on.stats['bytes_fetch'] == c_sim.stats['bytes_fetch']
+        cache_hits = c_on.stats['cache_hits']
+        print(json.dumps(dict(ok=bool(ok), inflight=int(inflight),
+                              cache_hits=float(cache_hits))))
     """))
     assert res["ok"]
     assert res["inflight"] >= 2
+    assert res["cache_hits"] > 0
 
 
 @pytest.mark.slow

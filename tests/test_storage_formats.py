@@ -129,3 +129,28 @@ def test_priors_cache_skips_escalations(skewed, tmp_path):
     assert second.stats["cap_escalations"] == 0
     caps = second.stats["final_caps"]
     assert caps["frontier"] >= first.stats["final_caps"]["frontier"]
+
+
+def test_priors_v2_hist_and_depth_roundtrip(skewed, tmp_path):
+    """Priors v2: run 1 persists the per-seed node_counts histogram and the
+    learned auto pipeline depth; run 2 preloads both (skew-aware p90 wave
+    sizing + auto-depth warm start) and stays oracle-exact."""
+    from repro.core.priors import hist_percentile, load_priors, priors_key
+
+    g, pg = skewed
+    pat = Pattern.from_edges(QUERIES["q1"])
+    oracle = canonicalize(enumerate_oracle(g, pat), pat)
+    pp = str(tmp_path / "priors.json")
+    cfg = dataclasses.replace(CFG, region_group_budget=64, enable_sme=False,
+                              pipeline_depth="auto", priors_path=pp)
+    first = rads_enumerate(pg, pat, cfg, mode="sim")
+    assert canonicalize(first.embeddings, pat) == oracle
+    entry = load_priors(pp)[priors_key(pat, pg)]
+    assert sum(entry["node_hist"]) > 0          # histogram persisted
+    assert entry["pipeline_depth"] >= 1         # learned depth persisted
+    assert sum(first.stats["node_hist"]) == sum(entry["node_hist"])
+    second = rads_enumerate(pg, pat, cfg, mode="sim")
+    assert canonicalize(second.embeddings, pat) == oracle
+    assert second.stats["priors_preloaded"]
+    assert second.stats["prior_cost_p90"] == hist_percentile(
+        entry["node_hist"], 0.90)
