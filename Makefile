@@ -25,10 +25,14 @@ collect-check:
 	$(PY) -m pytest -q --collect-only >/dev/null
 
 ## ~30s enumeration benchmark subset; writes BENCH_enumeration.json
-## (patterns x backends x storage formats x adjacency-cache on/off,
-## compile vs steady wall split, peak_adj_bytes dense-vs-bucketed,
-## cache hit-rate / bytes_saved_cache, sync-vs-async overlap comparison).
-## Fails if storage formats OR cache configurations disagree on any count.
+## (patterns x backends x storage formats x adjacency-cache on/off x wire
+## raw/varint, compile vs steady wall split, peak_adj_bytes
+## dense-vs-bucketed, cache hit-rate / bytes_saved_cache, actual
+## bytes_wire_* columns, sync-vs-async overlap comparison).
+## Fails if storage formats, cache configurations OR wire formats disagree
+## on any count, if a varint row's actual wire bytes are not below raw, or
+## if the actual coded fetch bytes exceed the modeled
+## bytes_fetch_compressed baseline by more than 5%.
 .PHONY: bench-smoke
 bench-smoke:
 	XLA_FLAGS="--xla_cpu_multi_thread_eigen=false" \
@@ -46,6 +50,18 @@ bench-smoke:
 	mis=[r for r in rows if 'cache_enabled' in r \
 	     and r['cache_enabled'] != (r.get('cache') == 'on')]; \
 	assert not mis, 'cache config not honoured (silently on/off): %r' % mis; \
+	vws=[r for r in rows if r.get('wire') == 'varint']; \
+	assert vws, 'no varint wire rows in the smoke subset'; \
+	bad_model=[r for r in vws \
+	     if r['bytes_wire_fetch'] > 1.05 * r['bytes_fetch_compressed']]; \
+	assert not bad_model, \
+	'actual coded fetch bytes exceed modeled baseline by >5%%: %r' \
+	% bad_model; \
+	bad_wire=[r for r in vws \
+	     if r['bytes_wire_fetch'] + r['bytes_wire_verify'] \
+	        >= r['bytes_fetch'] + r['bytes_verify']]; \
+	assert not bad_wire, \
+	'varint wire bytes not below raw accounting: %r' % bad_wire; \
 	adj={r['storage']: r['peak_adj_bytes'] for r in rows \
 	     if r['system'] == 'rads-sim' and r.get('cache') == 'on'}; \
 	con=[r for r in rows if r['system'] == 'rads-sim' \
@@ -57,8 +73,13 @@ bench-smoke:
 	hit=max((r['cache_hit_rate'] for r in con), default=0.0); \
 	whit=max((r.get('cache_hit_rate_warm', 0.0) for r in con), default=0.0); \
 	sav=max((r['bytes_saved_cache'] for r in con), default=0.0); \
-	print('bench-smoke: %d result rows, storage+cache counts agree; ' \
+	wv=vws[0]; \
+	wcut=1.0 - (wv['bytes_wire_fetch'] + wv['bytes_wire_verify']) \
+	     / max(wv['bytes_fetch'] + wv['bytes_verify'], 1.0); \
+	print('bench-smoke: %d result rows, storage+cache+wire counts agree; ' \
 	'adj bytes dense %d vs bucketed %d; cache hit-rate %.3f (warm %.3f) ' \
-	'bytes_saved_cache %.0f; sync %.0fus async %.0fus (async<=sync: %s)' \
+	'bytes_saved_cache %.0f; varint wire cut %.1f%%; ' \
+	'sync %.0fus async %.0fus (async<=sync: %s)' \
 	% (len(d['results']), adj.get('dense', -1), adj.get('bucketed', -1), \
-	hit, whit, sav, t['sync_us'], t['async_us'], t['async_leq_sync']))"
+	hit, whit, sav, 100 * wcut, \
+	t['sync_us'], t['async_us'], t['async_leq_sync']))"

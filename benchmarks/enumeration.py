@@ -16,11 +16,13 @@ Besides the ``common.emit`` CSV lines, the run writes a machine-readable
 ``BENCH_enumeration.json`` with two sections:
 
 * ``results``      — patterns × systems/backends × storage formats ×
-  adjacency-cache on/off: ``compile_us``/``wall_us``, match count, comm
-  bytes (plus ``bytes_saved_cache`` / ``cache_hit_rate`` /
-  ``bytes_fetch_compressed``), ``peak_adj_bytes`` (the perf-trajectory
-  payload); a count divergence between cache configurations aborts the
-  benchmark exactly like a storage-format divergence;
+  adjacency-cache on/off × wire format (``raw`` | ``varint``):
+  ``compile_us``/``wall_us``, match count, comm bytes (plus
+  ``bytes_saved_cache`` / ``cache_hit_rate`` / ``bytes_fetch_compressed``
+  and the actual coded ``bytes_wire_fetch``/``bytes_wire_verify``),
+  ``peak_adj_bytes`` (the perf-trajectory payload); a count divergence
+  between cache configurations or wire formats aborts the benchmark
+  exactly like a storage-format divergence;
 * ``sync_vs_async`` — the staged scheduler timed on the *same warm jitted
   stages* with ``depth=1`` (the old synchronous wave loop) vs
   ``depth=2`` (double-buffered pipeline, lazy Algorithm-3 grouping and
@@ -142,14 +144,19 @@ def run(datasets=("dblp_bench", "roadnet_bench", "livejournal_bench",
             pat = Pattern.from_edges(QUERIES[q])
             counts: set[int] = set()
             # sim backend × both storage formats × adjacency cache on/off
-            # (cache-off only on dense — the cache is format-agnostic); a
-            # shared runner_cache makes the second call reuse the jitted
-            # stages, so the warm run times steady-state execution and
-            # compile_us is the cold-warm delta
-            for fmt, use_cache in [(f, True) for f in STORAGE_FORMATS] + [
-                    ("dense", False)]:
+            # (cache-off only on dense — the cache is format-agnostic) ×
+            # wire format (varint cells prove the coded exchange: identical
+            # counts, smaller actual wire bytes); a shared runner_cache
+            # makes the second call reuse the jitted stages, so the warm
+            # run times steady-state execution and compile_us is the
+            # cold-warm delta
+            cells = ([(f, True, "raw") for f in STORAGE_FORMATS]
+                     + [("dense", False, "raw"), ("dense", True, "varint"),
+                        ("dense", False, "varint")])
+            for fmt, use_cache, wire in cells:
                 cfg_fmt = dataclasses.replace(CFG, storage_format=fmt,
-                                              enable_cache=use_cache)
+                                              enable_cache=use_cache,
+                                              wire_format=wire)
                 cache: dict = {}
                 t0 = time.perf_counter()
                 rc = rads_enumerate(pg, pat, cfg_fmt, mode="sim",
@@ -169,9 +176,12 @@ def run(datasets=("dblp_bench", "roadnet_bench", "livejournal_bench",
                 # broken probe/insert path shows up as hit_rate_warm == 0
                 st = rc.stats
                 rads_bytes = st["bytes_fetch"] + st["bytes_verify"]
-                tag = "" if use_cache else "-nocache"
+                wire_bytes = st["bytes_wire_fetch"] + st["bytes_wire_verify"]
+                tag = ("" if use_cache else "-nocache") + (
+                    "" if wire == "raw" else f"-{wire}")
                 emit(f"enum/{ds}/{q}/rads-{fmt}{tag}", wall_us,
                      f"count={r.count};comm_bytes={rads_bytes:.0f};"
+                     f"wire_bytes={wire_bytes:.0f};"
                      f"compile_us={compile_us:.0f};"
                      f"peak_adj_bytes={st['peak_adj_bytes']};"
                      f"cache_hit_rate={st['cache_hit_rate']:.3f};"
@@ -180,13 +190,15 @@ def run(datasets=("dblp_bench", "roadnet_bench", "livejournal_bench",
                      f"sme={st['n_sme_seeds']}")
                 out["results"].append(dict(
                     dataset=ds, query=q, system="rads-sim", storage=fmt,
-                    cache="on" if use_cache else "off",
+                    cache="on" if use_cache else "off", wire=wire,
                     cache_enabled=bool(st["cache_enabled"]),
                     cache_probes=float(st["cache_probes"]),
                     wall_us=wall_us, compile_us=compile_us,
                     count=int(r.count), comm_bytes=float(rads_bytes),
                     bytes_fetch=float(st["bytes_fetch"]),
                     bytes_verify=float(st["bytes_verify"]),
+                    bytes_wire_fetch=float(st["bytes_wire_fetch"]),
+                    bytes_wire_verify=float(st["bytes_wire_verify"]),
                     bytes_fetch_compressed=float(
                         st["bytes_fetch_compressed"]),
                     bytes_saved_cache=float(st["bytes_saved_cache"]),
@@ -219,7 +231,7 @@ def run(datasets=("dblp_bench", "roadnet_bench", "livejournal_bench",
                      f"count={rg.count};comm_bytes={g_bytes:.0f}")
                 out["results"].append(dict(
                     dataset=ds, query=q, system="rads-gather",
-                    storage="bucketed", cache="on", wall_us=t_g,
+                    storage="bucketed", cache="on", wire="raw", wall_us=t_g,
                     compile_us=max(cold_us - t_g, 0.0),
                     peak_adj_bytes=int(rgc.stats["peak_adj_bytes"]),
                     cache_hit_rate=float(rgc.stats["cache_hit_rate"]),

@@ -24,7 +24,17 @@ class EngineConfig:
     cache_slots: int = 1 << 12         # sets per device (must be a power of 2:
                                        # the set index is `v & (slots - 1)`)
     cache_ways: int = 2                # associativity (1 = direct-mapped)
+    cache_decay: int = 0               # shared-benefit decay period: every
+                                       # `cache_decay` update batches the live
+                                       # benefit counters are halved (>> 1) so
+                                       # stale hub lines stop pinning the cache
+                                       # across phases (0 = no decay)
     enable_work_stealing: bool = True  # checkR/shareR analogue (seed rebalance)
+    # --- exchange wire format (core/wire.py codecs) ------------------------- #
+    wire_format: str = "raw"           # 'raw' (int32 slabs, the reference) |
+                                       # 'varint' (delta+varint / Elias-Fano
+                                       # coded u8 streams on the wire; results
+                                       # are wire-format-invariant)
     plan_rho: float = 1.0              # score-function exponent (paper uses 1)
     seed: int = 0
     # --- on-device adjacency storage (graph/storage.py DeviceGraph) --------- #
@@ -51,6 +61,14 @@ class EngineConfig:
                 f"index is a bitmask), got {self.cache_slots}")
         if self.cache_ways < 1:
             raise ValueError(f"cache_ways must be >= 1, got {self.cache_ways}")
+        if self.cache_decay < 0:
+            raise ValueError(
+                f"cache_decay must be >= 0 (0 disables the benefit decay "
+                f"schedule), got {self.cache_decay}")
+        if self.wire_format not in ("raw", "varint"):
+            raise ValueError(
+                f"wire_format must be 'raw' or 'varint', "
+                f"got {self.wire_format!r}")
 
 
 # dataset stand-ins: name -> generator kwargs (see graph/generators.py)

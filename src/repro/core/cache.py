@@ -39,7 +39,17 @@ leaf's short row.  The counters realize that score online:
   the candidate is admitted only if its benefit is >= the victim's;
 * a **rejected** candidate decays the victim by its own benefit (aging), so
   a stale once-hot line loses a contest against a line that keeps being
-  fetched — frequency × size decides, not recency alone.
+  fetched — frequency × size decides, not recency alone;
+* optionally, a **shared-benefit decay schedule** (``EngineConfig.
+  cache_decay > 0``): every ``decay`` update batches the benefit counters
+  of all *live* lines are halved (``>> 1``).  A hub line that was hot in an
+  early phase but stops being fetched then loses its accumulated benefit
+  geometrically instead of pinning its set for the rest of the run —
+  without decay a long-lived line's counter only falls via rejected-
+  candidate aging, which needs repeated conflicting misses in that exact
+  set.  Empty ways keep their sentinel benefit (they must always lose the
+  victim contest), and the batch tick is part of the pytree, so the
+  schedule is deterministic across backends and survives re-jits.
 
 Within one update batch at most one insert lands per set (all candidates of
 a set see the same pre-update benefit, hence pick the same victim way); the
@@ -93,20 +103,24 @@ class AdjCache:
     ways: int         # associativity (1 = direct-mapped)
     n: int            # sentinel / invalid key (== graph.n)
     line_width: int   # payload row width (== graph.max_degree)
+    decay: int        # halve live benefits every `decay` batches (0 = off)
 
     keys: jnp.ndarray     # (ndev, slots, ways) int32, n = invalid
     rows: jnp.ndarray     # (ndev, slots, ways, line_width) int32
     benefit: jnp.ndarray  # (ndev, slots, ways) int32
+    tick: jnp.ndarray     # (ndev,) int32 — update batches seen (decay clock)
 
     @classmethod
     def build(cls, ndev: int, slots: int, ways: int, n: int,
-              line_width: int) -> "AdjCache":
+              line_width: int, decay: int = 0) -> "AdjCache":
         """An all-invalid cache of the given geometry."""
         return cls(
             ndev=ndev, slots=slots, ways=ways, n=n, line_width=line_width,
+            decay=decay,
             keys=jnp.full((ndev, slots, ways), n, jnp.int32),
             rows=jnp.full((ndev, slots, ways, line_width), n, jnp.int32),
-            benefit=jnp.full((ndev, slots, ways), _EMPTY_BENEFIT, jnp.int32))
+            benefit=jnp.full((ndev, slots, ways), _EMPTY_BENEFIT, jnp.int32),
+            tick=jnp.zeros((ndev,), jnp.int32))
 
     @property
     def cache_bytes(self) -> int:
@@ -133,24 +147,34 @@ class AdjCache:
         — the merged fetch responses (cached row where hit, wire row where
         miss).  Ids must be unique per device among valid (< n) entries
         (the fetchV request buffers are deduped upstream).
+
+        With ``decay > 0`` the live benefit counters are halved once every
+        ``decay`` batches after the bump/admission pass (the shared-benefit
+        decay schedule; see module docstring).
         """
         n = self.n
         k, r, b = jax.vmap(
             lambda ck, cr, cb, i, h, w, rw: _update_dev(
                 ck, cr, cb, n, i, h, w, rw)
         )(self.keys, self.rows, self.benefit, ids, hit, way, rows)
+        tick = self.tick + 1
+        if self.decay > 0:
+            fire = (tick % self.decay == 0)[:, None, None]
+            b = jnp.where(fire & (k < n), b >> 1, b)
         return AdjCache(ndev=self.ndev, slots=self.slots, ways=self.ways,
                         n=self.n, line_width=self.line_width,
-                        keys=k, rows=r, benefit=b)
+                        decay=self.decay, keys=k, rows=r, benefit=b,
+                        tick=tick)
 
     def tree_flatten(self):
-        return ((self.keys, self.rows, self.benefit),
-                (self.ndev, self.slots, self.ways, self.n, self.line_width))
+        return ((self.keys, self.rows, self.benefit, self.tick),
+                (self.ndev, self.slots, self.ways, self.n, self.line_width,
+                 self.decay))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        keys, rows, benefit = children
-        return cls(*aux, keys=keys, rows=rows, benefit=benefit)
+        keys, rows, benefit, tick = children
+        return cls(*aux, keys=keys, rows=rows, benefit=benefit, tick=tick)
 
 
 def build_cache(cfg, g) -> AdjCache | None:
@@ -164,7 +188,8 @@ def build_cache(cfg, g) -> AdjCache | None:
         return None
     return AdjCache.build(ndev=g.ndev, slots=cfg.cache_slots,
                           ways=cfg.cache_ways, n=g.n,
-                          line_width=g.max_degree)
+                          line_width=g.max_degree,
+                          decay=cfg.cache_decay)
 
 
 # --------------------------------------------------------------------------- #

@@ -109,7 +109,9 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
             g = g.shard(mesh)
             if adj_cache is not None:
                 adj_cache = adj_cache.shard(mesh)
-        runner = StageRunner(g, pd, cfg, Exchange(mode=mode, mesh=mesh),
+        runner = StageRunner(g, pd, cfg,
+                             Exchange(mode=mode, mesh=mesh,
+                                      wire_format=cfg.wire_format),
                              cache=adj_cache)
         if ck is not None:
             runner_cache[ck] = (pg, explicit_plan, runner)
@@ -132,6 +134,8 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
     stats = dict(n_sme_seeds=int(sum(len(s) for s in sme_seeds)),
                  n_dist_seeds=len(dist_seeds_all),
                  bytes_fetch=0.0, bytes_verify=0.0, n_groups=0,
+                 bytes_wire_fetch=0.0, bytes_wire_verify=0.0,
+                 wire_format=cfg.wire_format,
                  bytes_fetch_compressed=0.0, bytes_saved_cache=0.0,
                  cache_hits=0.0, cache_probes=0.0,
                  cache_enabled=bool(runner.cache is not None),
@@ -156,6 +160,8 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
         stats[f"{phase}_count"] += c
         stats["bytes_fetch"] += float(st["bytes_fetch"])
         stats["bytes_verify"] += float(st["bytes_verify"])
+        stats["bytes_wire_fetch"] += float(st["bytes_wire_fetch"])
+        stats["bytes_wire_verify"] += float(st["bytes_wire_verify"])
         stats["bytes_fetch_compressed"] += float(st["bytes_fetch_compressed"])
         stats["bytes_saved_cache"] += float(st["bytes_saved_cache"])
         stats["cache_hits"] += float(st["cache_hits"])

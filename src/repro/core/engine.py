@@ -40,6 +40,17 @@ boundaries as a pytree with no host round-trips.  Cache state only changes
 which transport delivers a row, never its bytes, so enumeration results
 are cache-invariant.
 
+Both exchanges additionally speak the pluggable **wire format**
+(``ExchangeBackend.wire_format``, selected by ``EngineConfig.wire_format``):
+with ``"varint"`` the request/response payloads are encoded as compact
+``uint8`` streams *inside the jitted stages* (:mod:`repro.core.wire` —
+delta+varint ids and rows for ``fetchV``, Elias-Fano + run-delta pairs and
+bit-packed answers for ``verifyE``) and decoded on the receiving device;
+``bytes_wire_fetch``/``bytes_wire_verify`` account the actual stream
+lengths, while ``bytes_fetch``/``bytes_verify`` keep the raw-equivalent
+accounting so the two formats stay comparable.  The codecs are exact, so
+results are wire-format-invariant.
+
 The engine reads adjacency exclusively through the pluggable
 :class:`~repro.graph.storage.DeviceGraph` interface (``rows_at``/``deg_at``
 over the stacked layout): the ``dense`` format is the seed's padded array,
@@ -68,9 +79,11 @@ from repro.configs.rads import EngineConfig
 from repro.core.cache import AdjCache, probe_dev
 from repro.core.exchange import (ExchangeBackend, compact,
                                  unique_ids, unique_pairs)
+from repro.core import wire as wire_codec
 from repro.core.plan import Plan
 from repro.graph.storage import DeviceGraph
-from repro.kernels.intersect.ops import intersect as _intersect_op
+from repro.kernels.intersect.ops import (intersect as _intersect_op,
+                                         tile_defaults as _intersect_tiles)
 from repro.kernels.membership.ops import membership as _membership_op
 
 
@@ -96,9 +109,15 @@ def _backedge_mask(g: DeviceGraph, w_row: jnp.ndarray, cand: jnp.ndarray,
     invalidated — so the final masks are identical.
     """
     if g.intersect_backedge:
+        # tile the kernel against the *bucket* caps, not the padded window:
+        # on the bucketed layout every row's content fits the top cap, so
+        # small-bucket graphs get narrower m-chunks (less sentinel traffic)
+        caps = getattr(g, "bucket_caps", None)
+        bb, mc = _intersect_tiles(caps[-1]) if caps else (None, None)
         mask, _ = _intersect_op(cand, w_row, sentinel=g.n,
                                 use_kernel=cfg.use_pallas_kernels,
-                                interpret=jax.default_backend() != "tpu")
+                                interpret=jax.default_backend() != "tpu",
+                                block_b=bb, m_chunk=mc)
         return mask
     return _membership(w_row, cand, cfg.use_pallas_kernels)
 
@@ -212,7 +231,8 @@ def _varint_id_bytes(wire: jnp.ndarray, n: int) -> jnp.ndarray:
 
 
 def fetch_exchange(g: DeviceGraph, exch: ExchangeBackend,
-                   pivots, need, fcap: int, cache: AdjCache | None = None):
+                   pivots, need, fcap: int, cache: AdjCache | None = None,
+                   use_pallas: bool = False):
     """Batched fetchV (§3.2 Expand): dedup foreign pivot ids, probe the
     adjacency cache, exchange the misses, answer with local adjacency rows,
     exchange back, merge cached rows in, and admit the miss responses.
@@ -226,6 +246,14 @@ def fetch_exchange(g: DeviceGraph, exch: ExchangeBackend,
     ``bytes_fetch_compressed`` models delta+varint id coding of the wire
     payload).  With ``cache=None`` the request path is byte-identical to
     the uncached engine and ``cache'`` is ``None``.
+
+    With ``exch.wire_format == "varint"`` the hole-masked request lanes are
+    delta+varint coded (:mod:`repro.core.wire`) and the a2a transports the
+    ``uint8`` streams + per-lane lengths; the answering device decodes,
+    responds with degree+delta coded rows, and the requester scatters the
+    compacted responses back onto its hole positions — decoded payloads
+    are bit-identical to the raw slabs, so only ``bytes_wire_fetch``
+    (actual stream lengths, always <= ``bytes_fetch``) changes.
     """
     ndev, stride, n, D = g.ndev, g.stride, g.n, g.max_degree
     t_ids = jnp.arange(ndev)
@@ -258,15 +286,44 @@ def fetch_exchange(g: DeviceGraph, exch: ExchangeBackend,
     # pre-compaction count for every *consumed* wave (an overflowing wave's
     # stats are discarded at retire, so truncation never reaches them)
     counts_hit = hit_c.sum(-1).astype(counts.dtype)
-    recv = exch.a2a(wire)                              # (ndev, src, fcap)
 
     def answer(t, rc):
         li = jnp.clip(rc - t * stride, 0, stride - 1)
         ok = (rc // stride == t) & (rc < n)
         return jnp.where(ok[..., None], g.rows_at(t, li), n)
 
-    resp = jax.vmap(answer)(t_ids, recv)               # (ndev, src, fcap, D)
-    fetched = exch.a2a(resp)                           # (ndev, peer, fcap, D)
+    if exch.wire_format == "varint":
+        # coded path: compacted varint id streams out, degree+delta coded
+        # row streams back, sender scatters onto its hole positions
+        req_cap, degs_cap, rows_cap = wire_codec.fetch_stream_caps(fcap, D)
+        interp = jax.default_backend() != "tpu"
+        req_s, req_len, req_raw, e_ov, model_ids = \
+            wire_codec.encode_ids_lanes(wire, n, req_cap,
+                                        use_pallas=use_pallas,
+                                        interpret=interp)
+        recv_s, recv_len, recv_raw = exch.a2a_tree((req_s, req_len, req_raw))
+        dec_ids, dec_mask = wire_codec.decode_ids_lanes(
+            recv_s, recv_len, recv_raw, fcap, n)
+        resp = jax.vmap(answer)(t_ids, dec_ids)        # (ndev, src, fcap, D)
+        dg_s, dg_len, ri_s, ri_len, resp_raw, r_ov = \
+            wire_codec.encode_rows_lanes(resp, dec_mask, n, degs_cap,
+                                         rows_cap)
+        bk_dg, bk_dgl, bk_ri, bk_ril, bk_raw = exch.a2a_tree(
+            (dg_s, dg_len, ri_s, ri_len, resp_raw))
+        rows_c = wire_codec.decode_rows_lanes(bk_dg, bk_dgl, bk_ri, bk_ril,
+                                              bk_raw, fcap, D, n)
+        fetched = wire_codec.scatter_compacted_lanes(rows_c, wire < n, n)
+        wire_stream_bytes = (
+            exch.off_device_payload_bytes(req_len)
+            + exch.off_device_payload_bytes(dg_len + ri_len))
+        wire_ov = e_ov | r_ov
+    else:
+        recv = exch.a2a(wire)                          # (ndev, src, fcap)
+        resp = jax.vmap(answer)(t_ids, recv)           # (ndev, src, fcap, D)
+        fetched = exch.a2a(resp)                       # (ndev, peer, fcap, D)
+        wire_stream_bytes = None
+        wire_ov = jnp.zeros((), bool)
+        model_ids = None
     if use_cache:
         # merge cached rows over the (sentinel) responses of masked slots,
         # then run the admission pass over this batch's probe outcomes
@@ -281,12 +338,19 @@ def fetch_exchange(g: DeviceGraph, exch: ExchangeBackend,
     full_bytes = exch.off_device_bytes(counts, elem)
     wire_bytes = exch.off_device_bytes(counts - counts_hit, elem) \
         if use_cache else full_bytes
-    comp_bytes = (exch.off_device_payload_bytes(_varint_id_bytes(wire, n))
+    # the modeled column reuses the codec's sizing pass when it already ran
+    comp_ids = (_varint_id_bytes(wire, n) if model_ids is None
+                else model_ids)
+    comp_bytes = (exch.off_device_payload_bytes(comp_ids)
                   + exch.off_device_bytes(counts - counts_hit, 4.0 * D))
     zero = jnp.zeros((), jnp.float32)
     fstats = dict(
         bytes_fetch=wire_bytes,
         bytes_fetch_compressed=comp_bytes,
+        # actual on-the-wire bytes: stream lengths under 'varint', the raw
+        # accounting under 'raw' (per-lane raw escape keeps this <= raw)
+        bytes_wire_fetch=(wire_stream_bytes if wire_stream_bytes is not None
+                          else wire_bytes),
         bytes_saved_cache=full_bytes - wire_bytes,
         # probe/hit counters exist only when there is a cache to probe —
         # a --no-cache run must audit as having zero cache activity
@@ -294,14 +358,21 @@ def fetch_exchange(g: DeviceGraph, exch: ExchangeBackend,
         else zero,
         cache_probes=counts.sum().astype(jnp.float32) if use_cache
         else zero)
-    return reqs, fetched, jnp.any(ovs), fstats, cache
+    return reqs, fetched, jnp.any(ovs) | wire_ov, fstats, cache
 
 
 def verify_exchange(g: DeviceGraph, exch: ExchangeBackend,
                     pa, pb, pmask, vcap: int, use_pallas: bool = False):
     """Batched verifyE over the EVI (§3.2). pa/pb/pmask: (ndev, R, K).
     Pairs routed to owner(pa). Returns (ok (ndev, R, K) — True where the
-    edge exists or the slot is inactive, overflow, off_bytes)."""
+    edge exists or the slot is inactive, overflow, off_bytes, wire_bytes).
+
+    ``off_bytes`` is the raw-equivalent accounting (8 B/pair + 1 B/answer,
+    comparable across wire formats); ``wire_bytes`` is what actually
+    crossed: with ``exch.wire_format == "varint"`` the sorted ``a`` column
+    goes Elias-Fano, ``b`` goes run-delta varint, and the answers come
+    back bit-packed (:mod:`repro.core.wire`) — with ``"raw"`` the two are
+    equal."""
     ndev, stride, n = g.ndev, g.stride, g.n
     R, K = pa.shape[1], pa.shape[2]
     fa, fb, fm = (x.reshape(ndev, R * K) for x in (pa, pb, pmask))
@@ -320,8 +391,6 @@ def verify_exchange(g: DeviceGraph, exch: ExchangeBackend,
         return ra, rb, ca, slot, ov_a | ov_b
 
     reqs_a, reqs_b, counts, slots, ov = jax.vmap(build)(ua, ub, umask, owners)
-    # the (a, b) request buffers travel as one sub-state through the backend
-    recv_a, recv_b = exch.a2a_tree((reqs_a, reqs_b))
 
     def answer(t, ra, rb):
         li = jnp.clip(ra - t * stride, 0, stride - 1)
@@ -332,8 +401,29 @@ def verify_exchange(g: DeviceGraph, exch: ExchangeBackend,
                            use_pallas).reshape(rb.shape)
         return memb & local_ok
 
-    ans = jax.vmap(answer)(jnp.arange(ndev), recv_a, recv_b)
-    back = exch.a2a(ans)                               # (ndev, peer, vcap)
+    if exch.wire_format == "varint":
+        # coded path: EF(a) + run-delta varint(b) out, bit-packed bools back
+        a_cap, b_cap, ans_cap = wire_codec.verify_stream_caps(vcap)
+        a_s, a_len, b_s, b_len, p_raw, p_ov = wire_codec.encode_pairs_lanes(
+            reqs_a, reqs_b, n, a_cap, b_cap)
+        ra_s, ra_len, rb_s, rb_len, r_raw, r_counts = exch.a2a_tree(
+            (a_s, a_len, b_s, b_len, p_raw, counts))
+        dec_a, dec_b, _ = wire_codec.decode_pairs_lanes(
+            ra_s, ra_len, rb_s, rb_len, r_raw, r_counts, vcap, n, n)
+        ans = jax.vmap(answer)(jnp.arange(ndev), dec_a, dec_b)
+        ans_s, ans_len = wire_codec.pack_bools_lanes(ans, r_counts, ans_cap)
+        back_s, _ = exch.a2a_tree((ans_s, ans_len))
+        back = wire_codec.unpack_bools_lanes(back_s, counts, vcap)
+        wire_bytes = (exch.off_device_payload_bytes(a_len + b_len)
+                      + exch.off_device_payload_bytes(ans_len))
+        ov = ov | p_ov
+    else:
+        # the (a, b) request buffers travel as one sub-state through the
+        # backend
+        recv_a, recv_b = exch.a2a_tree((reqs_a, reqs_b))
+        ans = jax.vmap(answer)(jnp.arange(ndev), recv_a, recv_b)
+        back = exch.a2a(ans)                           # (ndev, peer, vcap)
+        wire_bytes = None
 
     def collect(bk, ow, sl, mm, rk):
         sl_c = jnp.clip(sl, 0, vcap - 1)
@@ -344,7 +434,9 @@ def verify_exchange(g: DeviceGraph, exch: ExchangeBackend,
     ok = ok_flat.reshape(ndev, R, K) | ~pmask
     # 8B pair request + 1B bool response per off-device entry
     off_bytes = exch.off_device_bytes(counts, 8 + 1)
-    return ok, jnp.any(ov), off_bytes
+    if wire_bytes is None:
+        wire_bytes = off_bytes
+    return ok, jnp.any(ov), off_bytes, wire_bytes
 
 
 # --------------------------------------------------------------------------- #
@@ -469,6 +561,8 @@ class WaveState:
     lost: jnp.ndarray            # () bool — any dropped fetchV response
     bytes_fetch: jnp.ndarray     # () f32 — off-device fetchV wire traffic
     bytes_verify: jnp.ndarray    # () f32 — off-device verifyE traffic
+    bytes_wire_fetch: jnp.ndarray   # () f32 — actual coded fetchV stream bytes
+    bytes_wire_verify: jnp.ndarray  # () f32 — actual coded verifyE stream bytes
     bytes_fetch_compressed: jnp.ndarray  # () f32 — modeled delta+varint wire
     bytes_saved_cache: jnp.ndarray       # () f32 — fetchV bytes hit-masked
     cache_hits: jnp.ndarray      # () f32 — unique foreign ids served by cache
@@ -482,6 +576,7 @@ class WaveState:
     def tree_flatten(self):
         return ((self.rows, self.alive, self.seed_slot, self.overflow,
                  self.lost, self.bytes_fetch, self.bytes_verify,
+                 self.bytes_wire_fetch, self.bytes_wire_verify,
                  self.bytes_fetch_compressed, self.bytes_saved_cache,
                  self.cache_hits, self.cache_probes,
                  self.node_counts, self.rounds_alive,
@@ -506,6 +601,8 @@ def init_wave(g: DeviceGraph, seeds, seed_mask) -> WaveState:
         lost=jnp.zeros((), bool),
         bytes_fetch=jnp.zeros((), jnp.float32),
         bytes_verify=jnp.zeros((), jnp.float32),
+        bytes_wire_fetch=jnp.zeros((), jnp.float32),
+        bytes_wire_verify=jnp.zeros((), jnp.float32),
         bytes_fetch_compressed=jnp.zeros((), jnp.float32),
         bytes_saved_cache=jnp.zeros((), jnp.float32),
         cache_hits=jnp.zeros((), jnp.float32),
@@ -533,10 +630,11 @@ def fetch_stage(g: DeviceGraph, pd: PlanData, cfg: EngineConfig,
     piv_col = pd.unit_piv_cols[ui]
     req_ids, fetched, f_ov, fs, cache = fetch_exchange(
         g, exch, state.rows[:, :, piv_col], state.alive,
-        cfg.fetch_cap, cache)
+        cfg.fetch_cap, cache, use_pallas=cfg.use_pallas_kernels)
     state = replace(
         state, overflow=state.overflow | f_ov,
         bytes_fetch=state.bytes_fetch + fs["bytes_fetch"],
+        bytes_wire_fetch=state.bytes_wire_fetch + fs["bytes_wire_fetch"],
         bytes_fetch_compressed=(state.bytes_fetch_compressed
                                 + fs["bytes_fetch_compressed"]),
         bytes_saved_cache=state.bytes_saved_cache + fs["bytes_saved_cache"],
@@ -589,15 +687,18 @@ def verify_stage(g: DeviceGraph, pd: PlanData, cfg: EngineConfig,
     the unit's per-device alive count to ``rounds_alive``."""
     alive = state.alive
     overflow, bytes_verify = state.overflow, state.bytes_verify
+    bytes_wire_verify = state.bytes_wire_verify
     if (not local_only) and unit_evi_width(pd, ui) > 0:
-        ok, v_ov, v_b = verify_exchange(
+        ok, v_ov, v_b, v_wb = verify_exchange(
             g, exch, state.pend_a, state.pend_b, state.pend_m,
             cfg.verify_cap, use_pallas=cfg.use_pallas_kernels)
         alive = alive & jnp.all(ok, axis=-1)
         overflow = overflow | v_ov
         bytes_verify = bytes_verify + v_b
+        bytes_wire_verify = bytes_wire_verify + v_wb
     return replace(state, alive=alive, overflow=overflow,
                    bytes_verify=bytes_verify,
+                   bytes_wire_verify=bytes_wire_verify,
                    rounds_alive=state.rounds_alive + (alive.sum(axis=-1),),
                    pend_a=None, pend_b=None, pend_m=None)
 
@@ -608,6 +709,8 @@ def finalize_wave(state: WaveState):
     counts = state.alive.sum(axis=-1)
     stats = dict(bytes_fetch=state.bytes_fetch,
                  bytes_verify=state.bytes_verify,
+                 bytes_wire_fetch=state.bytes_wire_fetch,
+                 bytes_wire_verify=state.bytes_wire_verify,
                  bytes_fetch_compressed=state.bytes_fetch_compressed,
                  bytes_saved_cache=state.bytes_saved_cache,
                  cache_hits=state.cache_hits,

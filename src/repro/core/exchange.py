@@ -18,6 +18,15 @@ Built-in backends, selected with ``Exchange(mode)``:
                with plain device-local gathers; runs on CPU-only
                single-process hosts with no mesh at all.
 
+Every backend also carries a **wire format** (``wire_format="raw" |
+"varint"``, selected via ``EngineConfig.wire_format`` / ``--wire``): with
+``"varint"`` the engine stages hand ``a2a``/``a2a_tree`` the coded ``uint8``
+streams plus per-lane byte lengths from :mod:`repro.core.wire` instead of
+the raw int32 slabs, and the ``bytes_wire_fetch``/``bytes_wire_verify``
+accounting sums the *actual* stream lengths
+(:meth:`ExchangeBackend.off_device_payload_bytes`) rather than the modeled
+element sizes.  Results are wire-format-invariant (the codecs are exact).
+
 New backends register with ``@register_exchange_backend("name")``.
 """
 from __future__ import annotations
@@ -43,6 +52,7 @@ class ExchangeBackend:
 
     mesh: Mesh | None = None
     axis: str = "data"
+    wire_format: str = "raw"   # 'raw' int32 slabs | 'varint' coded u8 streams
 
     def a2a(self, x: jnp.ndarray) -> jnp.ndarray:
         """x: (ndev_src, ndev_dst, ...) -> out[t, s] = x[s, t]."""
@@ -103,16 +113,23 @@ def exchange_backends() -> tuple[str, ...]:
 
 
 def Exchange(mode: str = "sim", mesh: Mesh | None = None,
-             axis: str = "data") -> ExchangeBackend:
+             axis: str = "data", wire_format: str = "raw") -> ExchangeBackend:
     """Factory kept name-compatible with the old two-branch dataclass:
-    ``Exchange("sim")`` / ``Exchange(mode="spmd", mesh=mesh)``."""
+    ``Exchange("sim")`` / ``Exchange(mode="spmd", mesh=mesh)``.
+    ``wire_format`` selects the on-the-wire payload coding (see module
+    docstring); it is transport-independent, so every backend supports
+    both."""
     try:
         cls = _BACKENDS[mode]
     except KeyError:
         raise ValueError(
             f"unknown exchange mode {mode!r}; registered backends: "
             f"{list(exchange_backends())}") from None
-    return cls(mesh=mesh, axis=axis)
+    if wire_format not in ("raw", "varint"):
+        raise ValueError(
+            f"unknown wire format {wire_format!r}; expected 'raw' or "
+            f"'varint'")
+    return cls(mesh=mesh, axis=axis, wire_format=wire_format)
 
 
 # --------------------------------------------------------------------------- #

@@ -164,7 +164,12 @@ class StageRunner:
         return len(self.pd.unit_steps)
 
     def escalate(self) -> bool:
-        """Double every engine capacity (up to the ceiling) and re-jit."""
+        """Double every engine capacity (up to the ceiling) and re-jit.
+
+        The wire-codec stream capacities (:mod:`repro.core.wire`) are
+        derived from ``fetch_cap``/``verify_cap`` inside the stages, so
+        they escalate — and re-jit — alongside the engine caps; the cache
+        geometry alone stays fixed."""
         c = self.cfg
         if c.frontier_cap >= _MAX_CAP:
             return False

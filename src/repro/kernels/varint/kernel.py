@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: fused delta + LEB128-size pass of the id wire codec.
+
+The fetchV request encoder (:mod:`repro.core.wire`) needs, per lane, the
+delta of every valid id against the previous valid id (sentinel holes
+skipped) and the varint byte length of that delta.  On TPU this is a
+running-max scan fused with elementwise threshold compares — one VMEM pass
+over the (block_b, M) tile instead of the three materialized intermediates
+of the jnp reference.  The running prefix max is computed per m-chunk with
+a log-step shift/max ladder (VPU-friendly, no dynamic gather), carrying
+the last column across chunks exactly like the membership kernel streams
+its row chunks.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _chunk_cummax(x: jnp.ndarray) -> jnp.ndarray:
+    """Within-chunk inclusive prefix max via log-step shifts."""
+    tb, c = x.shape
+    s = 1
+    while s < c:
+        shifted = jnp.concatenate(
+            [jnp.full((tb, s), -1, x.dtype), x[:, :-s]], axis=1)
+        x = jnp.maximum(x, shifted)
+        s *= 2
+    return x
+
+
+def _delta_vlen_kernel(ids_ref, delta_ref, vlen_ref, *, m_chunk: int,
+                       sentinel: int):
+    ids = ids_ref[...]
+    tb, m = ids.shape
+    n_chunks = m // m_chunk
+    x = jnp.where(ids < sentinel, ids, -1)
+
+    def body(c, carry):
+        prev_last, delta_acc, vlen_acc = carry
+        xc = jax.lax.dynamic_slice(x, (0, c * m_chunk), (tb, m_chunk))
+        idc = jax.lax.dynamic_slice(ids, (0, c * m_chunk), (tb, m_chunk))
+        cm = jnp.maximum(_chunk_cummax(xc), prev_last[:, None])
+        prev = jnp.concatenate(
+            [prev_last[:, None], cm[:, :-1]], axis=1)
+        valid = idc < sentinel
+        d = jnp.where(prev >= 0, idc - prev, idc)
+        d = jnp.where(valid, jnp.maximum(d, 0), 0)
+        vl = (1 + (d >= 1 << 7) + (d >= 1 << 14) + (d >= 1 << 21)
+              + (d >= 1 << 28)).astype(jnp.int32)
+        vl = jnp.where(valid, vl, 0)
+        delta_acc = jax.lax.dynamic_update_slice(delta_acc, d,
+                                                 (0, c * m_chunk))
+        vlen_acc = jax.lax.dynamic_update_slice(vlen_acc, vl,
+                                                (0, c * m_chunk))
+        return cm[:, -1], delta_acc, vlen_acc
+
+    init = (jnp.full((tb,), -1, jnp.int32),
+            jnp.zeros((tb, m), jnp.int32), jnp.zeros((tb, m), jnp.int32))
+    _, delta, vlen = jax.lax.fori_loop(0, n_chunks, body, init)
+    delta_ref[...] = delta
+    vlen_ref[...] = vlen
+
+
+def delta_vlen_pallas(ids: jnp.ndarray, sentinel: int, block_b: int = 256,
+                      m_chunk: int = 128, interpret: bool = True):
+    """ids (B, M) int32 -> (delta (B, M) int32, vlen (B, M) int32)."""
+    B, M = ids.shape
+    m_chunk = min(m_chunk, max(M, 1))
+    Mp = -(-M // m_chunk) * m_chunk
+    Bp = -(-B // block_b) * block_b
+    pad = jnp.pad(ids, ((0, Bp - B), (0, Mp - M)),
+                  constant_values=sentinel)
+    grid = (Bp // block_b,)
+    delta, vlen = pl.pallas_call(
+        partial(_delta_vlen_kernel, m_chunk=m_chunk, sentinel=sentinel),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, Mp), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((block_b, Mp), lambda i: (i, 0)),
+                   pl.BlockSpec((block_b, Mp), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((Bp, Mp), jnp.int32),
+                   jax.ShapeDtypeStruct((Bp, Mp), jnp.int32)],
+        interpret=interpret,
+    )(pad)
+    return delta[:B, :M], vlen[:B, :M]

@@ -1,0 +1,15 @@
+from functools import partial
+
+import jax
+
+from repro.kernels.varint.kernel import delta_vlen_pallas
+from repro.kernels.varint.ref import delta_vlen_ref
+
+
+@partial(jax.jit, static_argnames=("sentinel", "use_kernel", "interpret"))
+def delta_vlen(ids, sentinel: int, use_kernel: bool = False,
+               interpret: bool = True):
+    """Delta against the previous valid id + LEB128 size, kernel-gated."""
+    if use_kernel:
+        return delta_vlen_pallas(ids, sentinel, interpret=interpret)
+    return delta_vlen_ref(ids, sentinel)

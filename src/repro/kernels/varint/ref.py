@@ -1,0 +1,41 @@
+"""jnp reference for the delta+varint sizing pass (the CPU test path).
+
+``delta_vlen_ref(ids, sentinel)``: ids (B, M) sorted ascending among the
+valid (< sentinel) entries, sentinel holes allowed.  Returns
+
+* ``delta`` (B, M) int32 — each valid id minus the previous valid id in its
+  row (the first valid id absolute); 0 at holes,
+* ``vlen``  (B, M) int32 — LEB128 byte length of that delta (1..5); 0 at
+  holes.
+
+This is the sizing/transform half of the fetchV id wire codec
+(:mod:`repro.core.wire`); the byte scatter stays jnp in both paths.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def varint_size(v: jnp.ndarray) -> jnp.ndarray:
+    """LEB128 byte length of non-negative int32 values (1..5) — the one
+    sizing ladder every codec path shares (`repro.core.wire` imports it;
+    the Pallas kernel body inlines the same compares)."""
+    v = v.astype(jnp.int32)
+    return (1 + (v >= 1 << 7).astype(jnp.int32)
+            + (v >= 1 << 14).astype(jnp.int32)
+            + (v >= 1 << 21).astype(jnp.int32)
+            + (v >= 1 << 28).astype(jnp.int32))
+
+
+def delta_vlen_ref(ids: jnp.ndarray, sentinel: int):
+    valid = ids < sentinel
+    x = jnp.where(valid, ids, -1)
+    run = jax.lax.cummax(x, axis=x.ndim - 1)
+    prev = jnp.concatenate(
+        [jnp.full(run[..., :1].shape, -1, run.dtype), run[..., :-1]],
+        axis=-1)
+    delta = jnp.where(prev >= 0, ids - prev, ids)
+    delta = jnp.where(valid, jnp.maximum(delta, 0), 0).astype(jnp.int32)
+    vlen = jnp.where(valid, varint_size(delta), 0).astype(jnp.int32)
+    return delta, vlen

@@ -31,6 +31,14 @@ def main():
     ap.add_argument("--pallas", action="store_true",
                     help="Pallas kernels: membership in back-edge checks, "
                          "intersect in bucketed candidate generation")
+    ap.add_argument("--wire", default="raw", choices=["raw", "varint"],
+                    help="exchange wire format: raw int32 slabs or "
+                         "delta+varint / Elias-Fano coded u8 streams "
+                         "(core/wire.py; results are identical)")
+    ap.add_argument("--cache-decay", type=int, default=None,
+                    help="halve cache benefit counters every N update "
+                         "batches (0 = never; default "
+                         f"{DEFAULT_ENGINE.cache_decay})")
     ap.add_argument("--no-cache", action="store_true",
                     help="disable the device-resident foreign-adjacency "
                          "cache (core/cache.py)")
@@ -70,6 +78,10 @@ def main():
                               cache_ways=(args.cache_ways
                                           if args.cache_ways is not None
                                           else DEFAULT_ENGINE.cache_ways),
+                              cache_decay=(args.cache_decay
+                                           if args.cache_decay is not None
+                                           else DEFAULT_ENGINE.cache_decay),
+                              wire_format=args.wire,
                               priors_path=args.priors)
     mesh = None
     if args.mode == "spmd":
@@ -88,6 +100,10 @@ def main():
     print(f"[enum] storage {st['storage_format']}: "
           f"adj {st['peak_adj_bytes'] / 1e6:.2f}MB on device | "
           f"priors preloaded {st['priors_preloaded']}")
+    print(f"[enum] wire {st['wire_format']}: actual fetch "
+          f"{st['bytes_wire_fetch']/1e6:.3f}MB verify "
+          f"{st['bytes_wire_verify']/1e6:.3f}MB "
+          f"(raw-equivalent {(st['bytes_fetch'] + st['bytes_verify'])/1e6:.3f}MB)")
     if st["cache_enabled"]:
         print(f"[enum] cache {cfg.cache_slots}x{cfg.cache_ways}: "
               f"hit-rate {st['cache_hit_rate']:.3f} "

@@ -47,20 +47,23 @@ def skewed():
 # --------------------------------------------------------------------------- #
 def test_config_validates_cache_knobs():
     EngineConfig(cache_slots=1 << 8, cache_ways=1)        # fine
+    EngineConfig(cache_decay=16)                          # fine
     with pytest.raises(ValueError, match="power of two"):
         EngineConfig(cache_slots=100)
     with pytest.raises(ValueError, match="power of two"):
         EngineConfig(cache_slots=0)
     with pytest.raises(ValueError, match="cache_ways"):
         EngineConfig(cache_ways=0)
+    with pytest.raises(ValueError, match="cache_decay"):
+        EngineConfig(cache_decay=-1)
 
 
 # --------------------------------------------------------------------------- #
 # Unit level: probe / admission bookkeeping
 # --------------------------------------------------------------------------- #
-def _mk(slots=8, ways=2, n=64, width=4):
+def _mk(slots=8, ways=2, n=64, width=4, decay=0):
     return AdjCache.build(ndev=1, slots=slots, ways=ways, n=n,
-                          line_width=width)
+                          line_width=width, decay=decay)
 
 
 def _rows_for(ids, n, width):
@@ -161,6 +164,60 @@ def test_benefit_prefers_large_rows():
     c = c.updated(jnp.asarray([7], jnp.int32)[None], no_hit, way0,
                   jnp.asarray(long_)[None])
     assert int(c.keys[0, 0, 0]) == 7           # big row won the contest
+
+
+def test_benefit_decay_schedule():
+    """cache_decay halves live benefit counters every N update batches:
+    the tick advances per batch, the halving hits exactly on the period,
+    and empty ways keep their sentinel benefit (they must always lose)."""
+    n = 64
+    c = _mk(slots=1, ways=2, n=n, decay=2)
+    c, _ = _feed(c, [1], n)                    # batch 1: insert, benefit 2
+    assert int(c.tick[0]) == 1
+    b1 = int(np.asarray(c.benefit)[0, 0, 0])
+    empty_b = int(np.asarray(c.benefit)[0, 0, 1])
+    for _ in range(3):                         # heat line 1
+        c, hit = _feed(c, [1], n)
+        assert hit.all()
+    # batches 2 and 4 fired the decay (bump first, then halve): without it
+    # benefit would be 2 + 3*2 = 8; with it (2+2)>>1 = 2, +2 = 4,
+    # (4+2)>>1 = 3
+    assert int(c.tick[0]) == 4
+    assert int(np.asarray(c.benefit)[0, 0, 0]) == 3
+    assert b1 == 2
+    # the empty way never decays toward a winnable benefit
+    assert int(np.asarray(c.benefit)[0, 0, 1]) == empty_b
+
+
+def test_decay_unpins_stale_hot_line():
+    """A line heated in an early phase loses its accumulated benefit under
+    decay and is evicted by a fresh candidate; without decay the identical
+    access pattern leaves it pinned."""
+    n = 64
+
+    def run(decay):
+        c = AdjCache.build(ndev=1, slots=1, ways=1, n=n, line_width=4,
+                           decay=decay)
+        c, _ = _feed(c, [1], n)
+        for _ in range(8):                     # phase 1: line 1 is hot
+            c, _ = _feed(c, [1], n)
+        for _ in range(6):                     # phase 2: line 1 goes stale
+            c, _ = _feed(c, [2], n)            # fresh candidate, benefit 2
+        return set(int(k) for k in np.asarray(c.keys).ravel() if k < n)
+
+    assert run(decay=0) == {1}                 # pinned forever
+    assert run(decay=1) == {2}                 # decayed out, fresh line in
+
+
+def test_decay_engine_parity(skewed):
+    """cache_decay > 0 changes wire traffic at most, never results."""
+    g, pg = skewed
+    pat = Pattern.from_edges(QUERIES["q1"])
+    oracle = canonicalize(enumerate_oracle(g, pat), pat)
+    cfg = dataclasses.replace(CFG, cache_decay=2)
+    res = rads_enumerate(pg, pat, cfg, mode="sim")
+    assert canonicalize(res.embeddings, pat) == oracle
+    assert res.stats["cache_probes"] > 0
 
 
 # --------------------------------------------------------------------------- #

@@ -39,6 +39,58 @@ def test_intersect_sweep(B, M):
     assert np.array_equal(np.asarray(c1), np.asarray(c2))
 
 
+@pytest.mark.parametrize("block_b,m_chunk", [(None, None), (64, 8),
+                                             (128, 32), (512, 128),
+                                             (256, 16)])
+@pytest.mark.parametrize("B,M", [(17, 8), (40, 65), (9, 200)])
+def test_intersect_tile_parity(B, M, block_b, m_chunk):
+    """The exposed block_b/m_chunk tiling kwargs (and the bucket-cap-tuned
+    defaults, block_b=None/m_chunk=None) never change the result — any
+    tile shape is bit-identical to the jnp reference."""
+    from repro.kernels.intersect.ops import intersect
+    rng = np.random.default_rng(B * M + (block_b or 0))
+    sent = 300
+    a = np.sort(rng.integers(0, sent, (B, M)).astype(np.int32), axis=1)
+    b = np.sort(rng.integers(0, sent, (B, M)).astype(np.int32), axis=1)
+    m1, c1 = intersect(jnp.asarray(a), jnp.asarray(b), sent,
+                       use_kernel=True, interpret=True,
+                       block_b=block_b, m_chunk=m_chunk)
+    m2, c2 = intersect(jnp.asarray(a), jnp.asarray(b), sent,
+                       use_kernel=False)
+    assert np.array_equal(np.asarray(m1), np.asarray(m2))
+    assert np.array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_intersect_tile_defaults():
+    """The tuned defaults narrow the chunk for small bucket caps (and
+    widen the batch tile to compensate); wide windows keep the 128-lane
+    chunk."""
+    from repro.kernels.intersect.ops import tile_defaults
+    assert tile_defaults(8) == (512, 8)
+    assert tile_defaults(1) == (512, 1)
+    assert tile_defaults(200) == (256, 128)
+    assert tile_defaults(64) == (256, 64)
+
+
+@pytest.mark.parametrize("B,M", [(3, 16), (7, 130), (260, 64), (1, 300)])
+def test_varint_delta_vlen_sweep(B, M):
+    """The fused delta+LEB128-size Pallas kernel (the wire-codec fast
+    path) matches the jnp reference over sorted-with-holes id lanes."""
+    from repro.kernels.varint.kernel import delta_vlen_pallas
+    from repro.kernels.varint.ref import delta_vlen_ref
+    rng = np.random.default_rng(B * M)
+    n = 1 << 27
+    ids = np.full((B, M), n, np.int32)
+    for r in range(B):
+        k = int(rng.integers(0, M + 1))
+        vals = np.sort(rng.choice(n, size=k, replace=False)).astype(np.int32)
+        ids[r, np.sort(rng.choice(M, k, replace=False))] = vals
+    d1, v1 = delta_vlen_pallas(jnp.asarray(ids), n)
+    d2, v2 = delta_vlen_ref(jnp.asarray(ids), n)
+    assert np.array_equal(np.asarray(d1), np.asarray(d2))
+    assert np.array_equal(np.asarray(v1), np.asarray(v2))
+
+
 @pytest.mark.parametrize("E,N,D,tn,te", [(300, 50, 8, 16, 64),
                                          (1000, 128, 32, 32, 128),
                                          (64, 7, 4, 8, 32)])

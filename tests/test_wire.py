@@ -1,0 +1,304 @@
+"""On-the-wire exchange codecs (core/wire.py):
+
+* property-style encode∘decode == identity roundtrips for the delta+varint
+  id codec, the degree+delta row codec, the Elias-Fano pair codec and the
+  bit-packed bool codec — including sentinel holes, empty lanes and
+  max-degree rows — with coded length <= raw length in every case,
+* the actual coded fetchV id length matches the PR 4 modeled
+  ``_varint_id_bytes`` column exactly (for universes < 2^28),
+* the per-lane raw escape fires on incompressible lanes,
+* wire='varint' == wire='raw' == oracle across exchange backends, storage
+  formats and cache on/off, with identical counts/embeddings and the exact
+  per-run identity ``bytes_wire_fetch <= bytes_fetch``,
+* escalation survival (stream caps re-jit alongside the engine caps) and
+  the Pallas-gated codec path,
+* (slow) the acceptance bar: >= 30% verifyE and >= 25% total wire-byte
+  reduction on the n=4096 / avg_deg=8 power-law graph.
+
+(spmd wire parity runs in the slow multi-device suite,
+test_multidevice.py.)
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # hermetic container: vendored fallback
+    from _hypothesis_compat import given, settings, strategies as st
+
+from repro.configs.rads import QUERIES, EngineConfig
+from repro.core import (Pattern, canonicalize, enumerate_oracle,
+                        rads_enumerate)
+from repro.core import wire
+from repro.core.engine import _varint_id_bytes
+from repro.graph import partition, powerlaw_graph
+
+CFG = EngineConfig(frontier_cap=1 << 11, fetch_cap=256, verify_cap=1024,
+                   region_group_budget=192, enable_sme=False,
+                   cache_slots=512, wire_format="varint")
+
+
+@pytest.fixture(scope="module")
+def skewed():
+    g = powerlaw_graph(192, 8, seed=2)
+    return g, partition(g, 4, method="hash")
+
+
+# --------------------------------------------------------------------------- #
+# Codec roundtrips (property-style)
+# --------------------------------------------------------------------------- #
+@given(st.lists(st.integers(0, 10 ** 6 - 1), min_size=0, max_size=48),
+       st.lists(st.booleans(), min_size=48, max_size=48),
+       st.integers(0, 1))
+@settings(max_examples=60, deadline=None)
+def test_property_ids_roundtrip(vals, holes, _):
+    """Sorted-unique ids at arbitrary hole positions: decode recovers the
+    exact id set (compacted), coded bytes <= 4/id, and the actual length
+    equals the PR 4 modeled varint column."""
+    n = 10 ** 6
+    m = 48
+    vals = sorted(set(vals))[:m]
+    ids = np.full(m, n, np.int32)
+    pos = [i for i, h in enumerate(holes) if h][:len(vals)]
+    vals = vals[:len(pos)]
+    ids[pos] = vals
+    s, ln, raw, ov = wire.encode_ids(jnp.asarray(ids), n, 4 * m)
+    dec, mask = wire.decode_ids(s, ln, raw, m, n)
+    got = [int(x) for x, mm in zip(dec, mask) if mm]
+    assert got == vals
+    assert int(ln) <= 4 * len(vals)
+    assert not bool(ov)
+    model = int(_varint_id_bytes(jnp.asarray(ids)[None, None], n)[0, 0])
+    assert int(ln) == min(model, 4 * len(vals))
+
+
+@given(st.integers(0, 12), st.integers(1, 16), st.integers(0, 10))
+@settings(max_examples=40, deadline=None)
+def test_property_rows_roundtrip(k, D, seed):
+    """Adjacency-window lanes: sorted rows of any degree 0..D (including
+    max-degree rows and the empty lane) decode bit-identically, with coded
+    bytes <= the raw padded 4·D/row."""
+    n = 10 ** 5
+    m = 12
+    rng = np.random.default_rng(seed * 131 + k * 7 + D)
+    rows = np.full((m, D), n, np.int32)
+    valid = np.zeros(m, bool)
+    valid[:k] = True
+    for i in range(k):
+        d = int(rng.integers(0, D + 1))
+        rows[i, :d] = np.sort(rng.choice(n, size=d, replace=False))
+    dcap, icap = 2 * m, 4 * D * m
+    dg, dl, ids_s, il, raw, ov = wire.encode_rows(
+        jnp.asarray(rows), jnp.asarray(valid), n, dcap, icap)
+    dec = wire.decode_rows(dg, dl, ids_s, il, raw, m, D, n)
+    assert np.array_equal(np.asarray(dec)[:k], rows[:k])
+    assert np.all(np.asarray(dec)[k:] == n)
+    assert int(dl) + int(il) <= 4 * D * k
+    assert not bool(ov)
+
+
+@given(st.lists(st.tuples(st.integers(0, 400), st.integers(0, 10 ** 5 - 1)),
+                min_size=0, max_size=40))
+@settings(max_examples=60, deadline=None)
+def test_property_pairs_roundtrip(items):
+    """verifyE lanes: lexicographically sorted unique (a, b) pairs survive
+    the Elias-Fano + run-delta coding exactly, at <= the raw 8 B/pair."""
+    n = 10 ** 5
+    m = 40
+    pairs = sorted(set(items))
+    k = len(pairs)
+    pa = np.full(m, n, np.int32)
+    pb = np.full(m, n, np.int32)
+    if k:
+        pa[:k] = [p[0] for p in pairs]
+        pb[:k] = [p[1] for p in pairs]
+    a_s, al, b_s, bl, raw, ov = wire.encode_pairs(
+        jnp.asarray(pa), jnp.asarray(pb), n, 4 * m, 4 * m)
+    da, db, mask = wire.decode_pairs(a_s, al, b_s, bl, raw, jnp.int32(k),
+                                     m, n, n)
+    assert np.array_equal(np.asarray(da)[:k], pa[:k])
+    assert np.array_equal(np.asarray(db)[:k], pb[:k])
+    assert int(mask.sum()) == k
+    assert int(al) + int(bl) <= 8 * k
+    assert not bool(ov)
+
+
+@given(st.lists(st.booleans(), min_size=1, max_size=64), st.integers(0, 64))
+@settings(max_examples=40, deadline=None)
+def test_property_bools_roundtrip(bits, count):
+    m = len(bits)
+    count = min(count, m)
+    s, ln = wire.pack_bools(jnp.asarray(bits), jnp.int32(count),
+                            (m + 7) // 8)
+    dec = wire.unpack_bools(s, jnp.int32(count), m)
+    want = [b if i < count else False for i, b in enumerate(bits)]
+    assert [bool(x) for x in dec] == want
+    assert int(ln) == (count + 7) // 8
+
+
+def test_raw_escape_on_incompressible_lane():
+    """A lane whose varints would exceed 4 B/id (delta >= 2^28) falls back
+    to the raw int32 layout — the `<= raw` guarantee is unconditional."""
+    n = 1 << 30
+    # both the absolute first id and the delta need 5-byte LEB128 (>= 2^28)
+    ids = np.array([(1 << 28) + 1, (1 << 29) + 7], np.int32)
+    lane = np.concatenate([ids, np.full(6, n, np.int32)])
+    s, ln, raw, ov = wire.encode_ids(jnp.asarray(lane), n, 32)
+    assert bool(raw)
+    assert int(ln) == 4 * 2
+    dec, mask = wire.decode_ids(s, ln, raw, 8, n)
+    assert [int(x) for x, m in zip(dec, mask) if m] == list(ids)
+    # a single 5-byte delta alone stays coded (6 bytes < raw 8) and decodes
+    lane2 = np.concatenate([np.array([5, (1 << 29) + 7], np.int32),
+                            np.full(6, n, np.int32)])
+    s2, ln2, raw2, _ = wire.encode_ids(jnp.asarray(lane2), n, 32)
+    assert not bool(raw2) and int(ln2) == 6
+    dec2, mask2 = wire.decode_ids(s2, ln2, raw2, 8, n)
+    assert [int(x) for x, m in zip(dec2, mask2) if m] == [5, (1 << 29) + 7]
+
+
+def test_stream_caps_derive_from_engine_caps():
+    """Stream capacities double alongside fetch/verify caps, so a
+    StageRunner escalation re-jits the codecs at the wider streams."""
+    r1, d1, i1 = wire.fetch_stream_caps(256, 16)
+    r2, d2, i2 = wire.fetch_stream_caps(512, 16)
+    assert (r2, d2, i2) == (2 * r1, 2 * d1, 2 * i1)
+    a1, b1, s1 = wire.verify_stream_caps(1024)
+    a2, b2, s2 = wire.verify_stream_caps(2048)
+    assert (a2, b2) == (2 * a1, 2 * b1) and s2 == 2 * s1
+
+
+# --------------------------------------------------------------------------- #
+# Engine level: raw == varint == oracle, accounting identities
+# --------------------------------------------------------------------------- #
+def test_wire_parity_matrix(skewed):
+    """wire='varint' == wire='raw' == oracle for sim and gather across both
+    storage formats and cache on/off, with identical coded byte accounting
+    across backends/formats and the exact identity
+    ``bytes_wire_fetch <= bytes_fetch`` (spmd runs in the slow suite)."""
+    g, pg = skewed
+    pat = Pattern.from_edges(QUERIES["q1"])
+    oracle = canonicalize(enumerate_oracle(g, pat), pat)
+    raw_ref = rads_enumerate(
+        pg, pat, dataclasses.replace(CFG, wire_format="raw"), mode="sim")
+    assert canonicalize(raw_ref.embeddings, pat) == oracle
+    key = None
+    for fmt, mode, cache_on in [("dense", "sim", True),
+                                ("bucketed", "sim", True),
+                                ("dense", "gather", True),
+                                ("bucketed", "gather", True),
+                                ("dense", "sim", False),
+                                ("bucketed", "gather", False)]:
+        cfg = dataclasses.replace(CFG, storage_format=fmt,
+                                  enable_cache=cache_on)
+        res = rads_enumerate(pg, pat, cfg, mode=mode)
+        tag = (fmt, mode, cache_on)
+        assert canonicalize(res.embeddings, pat) == oracle, tag
+        assert res.count == raw_ref.count, tag
+        st = res.stats
+        assert st["wire_format"] == "varint"
+        # raw-equivalent accounting is wire-format-invariant
+        assert st["bytes_verify"] == raw_ref.stats["bytes_verify"], tag
+        # the coded stream is strictly smaller than the raw wire here
+        assert st["bytes_wire_verify"] < st["bytes_verify"], tag
+        assert st["bytes_wire_fetch"] <= st["bytes_fetch"], tag
+        # actual coded fetch bytes never exceed the PR 4 modeled column
+        assert st["bytes_wire_fetch"] <= st["bytes_fetch_compressed"], tag
+        if cache_on:   # deterministic across backends and formats
+            k = (res.count, st["bytes_wire_fetch"], st["bytes_wire_verify"])
+            key = key or k
+            assert k == key, tag
+    # raw mode reports its own wire bytes == the raw accounting
+    assert (raw_ref.stats["bytes_wire_fetch"]
+            == raw_ref.stats["bytes_fetch"])
+    assert (raw_ref.stats["bytes_wire_verify"]
+            == raw_ref.stats["bytes_verify"])
+
+
+def test_wire_escalation_survival():
+    """Tiny caps force overflow splits + capacity escalations; the coded
+    stream caps re-jit alongside and the run stays oracle-exact."""
+    g = powerlaw_graph(128, 6, seed=2)
+    pg = partition(g, 4, method="hash")
+    pat = Pattern.from_edges(QUERIES["q3"])
+    oracle = canonicalize(enumerate_oracle(g, pat), pat)
+    cfg = EngineConfig(frontier_cap=512, fetch_cap=128, verify_cap=512,
+                       region_group_budget=256, enable_sme=False,
+                       cache_slots=256, wire_format="varint")
+    res = rads_enumerate(pg, pat, cfg, mode="sim")
+    assert canonicalize(res.embeddings, pat) == oracle
+    assert res.stats["cap_escalations"] >= 1
+    assert res.stats["bytes_wire_verify"] < res.stats["bytes_verify"]
+    assert res.stats["bytes_wire_fetch"] <= res.stats["bytes_fetch"]
+
+
+def test_wire_pallas_path(skewed):
+    """The Pallas-gated codec path (delta/varint-size kernel in the fetch
+    encoder + membership/intersect kernels) stays oracle-exact with
+    byte-identical wire accounting."""
+    g, pg = skewed
+    pat = Pattern.from_edges(QUERIES["q1"])
+    oracle = canonicalize(enumerate_oracle(g, pat), pat)
+    ref = rads_enumerate(pg, pat, CFG, mode="sim")
+    cfg = dataclasses.replace(CFG, use_pallas_kernels=True,
+                              storage_format="bucketed")
+    res = rads_enumerate(pg, pat, cfg, mode="sim")
+    assert canonicalize(res.embeddings, pat) == oracle
+    assert res.stats["bytes_wire_fetch"] == ref.stats["bytes_wire_fetch"]
+    assert res.stats["bytes_wire_verify"] == ref.stats["bytes_wire_verify"]
+
+
+def test_sync_equals_async_wire(skewed):
+    """Results are wire-format- and schedule-invariant together."""
+    g, pg = skewed
+    pat = Pattern.from_edges(QUERIES["q1"])
+    sync = rads_enumerate(pg, pat,
+                          dataclasses.replace(CFG, pipeline_depth=1),
+                          mode="sim")
+    anc = rads_enumerate(pg, pat, CFG, mode="sim")
+    assert sync.count == anc.count
+    assert canonicalize(sync.embeddings, pat) == canonicalize(
+        anc.embeddings, pat)
+
+
+def test_config_validates_wire_format():
+    EngineConfig(wire_format="varint")
+    with pytest.raises(ValueError, match="wire_format"):
+        EngineConfig(wire_format="zstd")
+    from repro.core.exchange import Exchange
+    with pytest.raises(ValueError, match="wire format"):
+        Exchange("sim", wire_format="zstd")
+
+
+@pytest.mark.slow
+def test_acceptance_powerlaw_4096_wire_drop():
+    """Acceptance bar: on the n=4096 / avg_deg=8 power-law graph,
+    wire='varint' cuts the actual verifyE wire bytes by >= 30% and the
+    total exchange bytes by >= 25% vs wire='raw', with identical counts
+    and the exact per-run identity bytes_wire_fetch <= bytes_fetch."""
+    g = powerlaw_graph(4096, 8, seed=1)
+    pg = partition(g, 4, method="hash")      # worst-case communication
+    pat = Pattern.from_edges(QUERIES["q1"])
+    cfg = EngineConfig(frontier_cap=1 << 14, fetch_cap=1 << 12,
+                       verify_cap=1 << 13, region_group_budget=1 << 12,
+                       enable_sme=False)
+    raw = rads_enumerate(pg, pat, cfg, mode="sim", return_embeddings=False)
+    var = rads_enumerate(pg, pat,
+                         dataclasses.replace(cfg, wire_format="varint"),
+                         mode="sim", return_embeddings=False)
+    assert var.count == raw.count
+    assert var.stats["n_waves"] >= 2
+    rs, vs = raw.stats, var.stats
+    assert vs["bytes_wire_fetch"] <= vs["bytes_fetch"]
+    assert vs["bytes_wire_verify"] > 0
+    verify_cut = 1.0 - vs["bytes_wire_verify"] / rs["bytes_wire_verify"]
+    total_raw = rs["bytes_wire_fetch"] + rs["bytes_wire_verify"]
+    total_var = vs["bytes_wire_fetch"] + vs["bytes_wire_verify"]
+    total_cut = 1.0 - total_var / total_raw
+    assert verify_cut >= 0.30, (vs["bytes_wire_verify"],
+                                rs["bytes_wire_verify"])
+    assert total_cut >= 0.25, (total_var, total_raw)
+    # actual coded fetch bytes within the modeled baseline (+5% bench gate)
+    assert vs["bytes_wire_fetch"] <= 1.05 * vs["bytes_fetch_compressed"]
