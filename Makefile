@@ -6,11 +6,23 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify verify-slow verify-all collect-check
+.PHONY: verify verify-slow verify-all collect-check lint lint-baseline
 
 ## tier-1: every module must collect; fast tests must pass
 verify: collect-check
 	$(PY) -m pytest -x -q -m "not slow"
+
+## radslint static analysis (tools/radslint): jit-safety, determinism,
+## recompile triggers, stat threading, dtype hygiene over src/repro.
+## Fails on any finding not in tools/radslint/baseline.json (the ratchet)
+## or on an inline suppression without a justification.
+lint:
+	$(PY) -m tools.radslint
+
+## regenerate the ratchet file — the baseline should only ever shrink;
+## review the diff before committing it
+lint-baseline:
+	$(PY) -m tools.radslint --update-baseline
 
 ## multi-device / subprocess jobs (8 and 512 forced host devices)
 verify-slow:

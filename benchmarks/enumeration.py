@@ -192,6 +192,7 @@ def run(datasets=("dblp_bench", "roadnet_bench", "livejournal_bench",
                     dataset=ds, query=q, system="rads-sim", storage=fmt,
                     cache="on" if use_cache else "off", wire=wire,
                     cache_enabled=bool(st["cache_enabled"]),
+                    cache_hits=float(st["cache_hits"]),
                     cache_probes=float(st["cache_probes"]),
                     wall_us=wall_us, compile_us=compile_us,
                     count=int(r.count), comm_bytes=float(rads_bytes),

@@ -54,6 +54,16 @@ class EngineConfig:
                                        # (off on CPU: jnp reference is the test path)
 
     def __post_init__(self):
+        # RL002's runtime twin: every escalation doubles the caps, and the
+        # priors cache warm-starts from persisted (doubled) values — caps on
+        # the power-of-two ladder are the invariant that makes a warm start
+        # land exactly on an already-jitted executable instead of re-tracing
+        for name in ("frontier_cap", "fetch_cap", "verify_cap"):
+            v = getattr(self, name)
+            if v <= 0 or (v & (v - 1)):
+                raise ValueError(
+                    f"{name} must be a positive power of two (capacity "
+                    f"escalation ladder / jit-cache warm starts), got {v}")
         if self.cache_slots <= 0 or (self.cache_slots
                                      & (self.cache_slots - 1)):
             raise ValueError(

@@ -670,6 +670,9 @@ def expand_stage(g: DeviceGraph, pd: PlanData, cfg: EngineConfig,
         lost |= lost_s
         k_off += len(spec.back_cols)
         inc = jax.vmap(
+            # duplicate indices are intended here (many frontier rows per
+            # seed) and integer .add is order-independent:
+            # radslint: allow[RL003] deterministic seed-slot segment-sum
             lambda ss, al: jnp.zeros((scap,), jnp.int32)
             .at[jnp.clip(ss, 0, scap - 1)].add(al.astype(jnp.int32))
         )(seed_slot, alive)

@@ -305,8 +305,15 @@ class PipelineScheduler:
                 ) -> tuple[float, int]:
         """Drain point: block on the wave's completeness flag; consume on
         success, split/escalate on overflow.  Returns (node_cost_sum, n)."""
-        rows, alive, counts, complete, st = finalize_wave(w.state)
-        if not bool(complete):               # <- the only blocking sync
+        # One batched device->host transfer per retired wave — the pipeline's
+        # only blocking sync.  A single device_get replaces the old scattered
+        # reads (bool(complete), np.asarray(node_counts) here, then eight
+        # scalar float() casts inside the driver's consume), each of which
+        # was its own tiny blocking round-trip serializing the async
+        # pipeline behind host latency (the bench's async <= sync signature).
+        rows, alive, counts, complete, st = jax.device_get(
+            finalize_wave(w.state))
+        if not complete:
             if max(len(b) for b in w.batches) <= 1:
                 if not self.runner.escalate():
                     raise RuntimeError("capacity ceiling reached")
@@ -319,7 +326,7 @@ class PipelineScheduler:
             return 0.0, 0
         # per-real-seed trie-node counts (padding slots masked) — consumers
         # use these for the persisted node_counts histogram (priors v2)
-        nc = np.asarray(st["node_counts"])[w.mask]
+        nc = st["node_counts"][w.mask]
         st["seed_node_counts"] = nc
         self.consume(rows, alive, counts, st, phase)
         self.stats["wave_s_total"] += time.perf_counter() - w.t_start

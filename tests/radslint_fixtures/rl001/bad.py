@@ -1,0 +1,30 @@
+"""RL001 planted violations: host syncs / tracer leaks inside jit code.
+
+Never imported at runtime — parsed by tools/radslint in tests only.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def leaky(x: jnp.ndarray) -> jnp.ndarray:
+    if x.sum() > 0:                  # RL001: Python `if` on a traced value
+        x = x + 1
+    n = int(x.sum())                 # RL001: int() cast forces a sync
+    v = x.sum().item()               # RL001: .item() forces a sync
+    h = np.asarray(x)                # RL001: np.* pulls the array to host
+    for r in x:                      # RL001: Python `for` over a traced value
+        v = v + r
+    return x * n + v + h.shape[0]
+
+
+def fetch(i):
+    return i
+
+
+def wave_loop():
+    """Host-side hot loop (configured via hot_loops in the test)."""
+    st = fetch(0)
+    done = bool(st[0])               # RL001: blocking scalar read per wave
+    return done

@@ -1,0 +1,22 @@
+"""RL001 known-good twin: same shapes, no host syncs."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def clean(x: jnp.ndarray) -> jnp.ndarray:
+    total = jnp.where(x.sum() > 0, x + 1, x)     # branch stays on device
+    for i in range(x.shape[0]):                  # static shape-derived loop
+        total = total + i
+    k = int(x.shape[0])                          # shape reads are static
+    return total * k
+
+
+def fetch(i):
+    return i
+
+
+def wave_loop():
+    st = fetch(0)
+    host = jax.device_get(st)                    # one sanctioned batched sync
+    return bool(host[0])

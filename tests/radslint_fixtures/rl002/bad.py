@@ -1,0 +1,18 @@
+"""RL002 planted violations: recompile triggers."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def kernel(x: jnp.ndarray, cap: int):    # RL002: scalar param re-traces
+    return x[:cap]
+
+
+LUT = [1, 2, 3]                          # mutable module state ...
+fn = jax.jit(lambda x: x + LUT[0])       # RL002: ... captured by a jit lambda
+
+fetch_cap = 1000                         # RL002: off the power-of-two ladder
+
+
+def run(x):
+    return kernel(x, fetch_cap)

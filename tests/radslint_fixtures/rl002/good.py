@@ -1,0 +1,20 @@
+"""RL002 known-good twin: statics declared, immutable capture, ladder caps."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("cap",))
+def kernel(x: jnp.ndarray, cap: int):
+    return x[:cap]
+
+
+LUT = (1, 2, 3)                          # immutable capture is fine
+fn = jax.jit(lambda x: x + LUT[0])
+
+fetch_cap = 1 << 10                      # on the ladder
+
+
+def run(x):
+    return kernel(x, fetch_cap)

@@ -1,0 +1,14 @@
+"""RL003 planted violations: determinism hazards inside jit code."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def undet(ids: jnp.ndarray, seg: jnp.ndarray):
+    u = jnp.unique(ids)                                  # RL003: no size=
+    counts = jnp.zeros((8,), jnp.float32)
+    counts = counts.at[seg].add(1.0)                     # RL003: dup scatter
+    tags = jnp.array({3, 1, 2})                          # RL003: set order
+    for k in {0, 1}:                                     # RL003: set iter
+        counts = counts + k
+    return u, counts, tags

@@ -1,0 +1,14 @@
+"""RL003 known-good twin: static shapes, annotated scatters, sorted sets."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def det(ids: jnp.ndarray, seg: jnp.ndarray):
+    u = jnp.unique(ids, size=8, fill_value=-1)           # static output shape
+    counts = jnp.zeros((8,), jnp.float32)
+    counts = counts.at[seg].add(1.0, mode="drop")        # annotated scatter
+    tags = jnp.array(sorted({3, 1, 2}))                  # order pinned
+    for k in (0, 1):                                     # ordered sequence
+        counts = counts + k
+    return u, counts, tags

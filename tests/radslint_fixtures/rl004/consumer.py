@@ -1,0 +1,6 @@
+"""RL004 fixture consumer: surfaces two of the three stat fields."""
+
+
+def consume(st: dict, stats: dict) -> None:
+    stats["bytes_fetch"] += float(st["bytes_fetch"])
+    stats["cache_hits"] += float(st["cache_hits"])

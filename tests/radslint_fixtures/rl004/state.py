@@ -1,0 +1,14 @@
+"""RL004 fixture: a stat-carrying state with one dropped counter."""
+import jax.numpy as jnp
+
+
+class WaveState:
+    bytes_fetch: jnp.ndarray
+    bytes_dropped: jnp.ndarray    # RL004: never finalized, never consumed
+    cache_hits: jnp.ndarray
+    rows: jnp.ndarray             # not a stat field: no pattern match
+
+
+def finalize(state: WaveState) -> dict:
+    return dict(bytes_fetch=state.bytes_fetch,
+                cache_hits=state.cache_hits)

@@ -1,0 +1,11 @@
+"""RL005 planted violations: 64-bit dtypes inside jit code (x64 is off)."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def widen(x: jnp.ndarray):
+    a = x.astype("int64")                    # RL005: astype to a wide dtype
+    b = jnp.zeros((4,), jnp.float64)         # RL005: jnp.float64 reference
+    c = jnp.arange(4, dtype="float64")       # RL005: dtype= string
+    return a, b, c

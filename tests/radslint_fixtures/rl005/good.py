@@ -1,0 +1,11 @@
+"""RL005 known-good twin: 32-bit dtypes only."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def narrow(x: jnp.ndarray):
+    a = x.astype("int32")
+    b = jnp.zeros((4,), jnp.float32)
+    c = jnp.arange(4, dtype="float32")
+    return a, b, c

@@ -1,0 +1,9 @@
+"""Suppression fixture: a justified inline allow silences the finding."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def seg_sum(seg: jnp.ndarray) -> jnp.ndarray:
+    # radslint: allow[RL003] integer segment-sum; order-independent adds
+    return jnp.zeros((4,), jnp.int32).at[seg].add(1)

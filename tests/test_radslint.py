@@ -1,0 +1,168 @@
+"""radslint self-tests: every planted fixture violation is caught, every
+known-good twin passes, and src/repro itself is clean modulo the committed
+baseline (the zero-findings ratchet CI enforces)."""
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from tools.radslint.api import lint_project, load_default_config  # noqa: E402
+from tools.radslint.config import Config, read_toml_section  # noqa: E402
+
+FIX = "tests/radslint_fixtures"
+
+
+def run_fixture(sub: str, **overrides):
+    cfg = Config(project_root=REPO, roots=[f"{FIX}/{sub}"],
+                 import_roots=[FIX],
+                 baseline=f"{FIX}/_no_such_baseline.json", **overrides)
+    return lint_project(cfg, use_baseline=False)
+
+
+def in_file(findings, name, checker=None):
+    return [f for f in findings if f.file.endswith(name)
+            and (checker is None or f.checker == checker)]
+
+
+# --------------------------------------------------------------------------- #
+# RL001 — host sync / tracer leak
+# --------------------------------------------------------------------------- #
+def test_rl001_bad_fixture_caught():
+    res = run_fixture("rl001", hot_loops=["rl001.bad.wave_loop",
+                                          "rl001.good.wave_loop"],
+                      hot_traced_calls=["fetch"])
+    bad = in_file(res.findings, "rl001/bad.py", "RL001")
+    msgs = " | ".join(f.message for f in bad)
+    assert "`if` branches on a traced value" in msgs
+    assert "`int()` on a traced value" in msgs
+    assert "`.item()`" in msgs
+    assert "`np.asarray`" in msgs
+    assert "`for` iterates a traced value" in msgs
+    assert "`bool()` on a traced value" in msgs      # the hot-loop finding
+    assert len(bad) >= 6
+
+
+def test_rl001_good_twin_clean():
+    res = run_fixture("rl001", hot_loops=["rl001.good.wave_loop"],
+                      hot_traced_calls=["fetch"])
+    assert not in_file(res.findings, "rl001/good.py")
+
+
+# --------------------------------------------------------------------------- #
+# RL002 — recompile triggers
+# --------------------------------------------------------------------------- #
+def test_rl002_bad_fixture_caught():
+    res = run_fixture("rl002")
+    bad = in_file(res.findings, "rl002/bad.py", "RL002")
+    msgs = " | ".join(f.message for f in bad)
+    assert "without static_argnames" in msgs
+    assert "closes over mutable `LUT`" in msgs
+    assert "off the power-of-2 escalation ladder" in msgs
+    assert len(bad) >= 3
+
+
+def test_rl002_good_twin_clean():
+    res = run_fixture("rl002")
+    assert not in_file(res.findings, "rl002/good.py")
+
+
+# --------------------------------------------------------------------------- #
+# RL003 — determinism
+# --------------------------------------------------------------------------- #
+def test_rl003_bad_fixture_caught():
+    res = run_fixture("rl003")
+    bad = in_file(res.findings, "rl003/bad.py", "RL003")
+    msgs = " | ".join(f.message for f in bad)
+    assert "jnp.unique without size=" in msgs
+    assert ".at[].add scatter" in msgs
+    assert "set/dict iteration order" in msgs
+    assert "iteration order of a set/dict" in msgs
+    assert len(bad) >= 4
+
+
+def test_rl003_good_twin_clean():
+    res = run_fixture("rl003")
+    assert not in_file(res.findings, "rl003/good.py")
+
+
+# --------------------------------------------------------------------------- #
+# RL004 — stat threading
+# --------------------------------------------------------------------------- #
+def test_rl004_dropped_stat_caught():
+    res = run_fixture(
+        "rl004",
+        stat_state="rl004.state.WaveState",
+        stat_finalizer="rl004.state.finalize",
+        stat_consumers=[f"{FIX}/rl004/consumer.py"])
+    bad = in_file(res.findings, "rl004/state.py", "RL004")
+    assert any("bytes_dropped" in f.message and "never reaches" in f.message
+               for f in bad)
+    assert any("bytes_dropped" in f.message and "not consumed" in f.message
+               for f in bad)
+    # the threaded fields are clean
+    assert not any("bytes_fetch" in f.message or "cache_hits" in f.message
+                   for f in bad)
+
+
+# --------------------------------------------------------------------------- #
+# RL005 — dtype hygiene
+# --------------------------------------------------------------------------- #
+def test_rl005_bad_fixture_caught():
+    res = run_fixture("rl005")
+    bad = in_file(res.findings, "rl005/bad.py", "RL005")
+    msgs = " | ".join(f.message for f in bad)
+    assert "'int64'" in msgs
+    assert "float64" in msgs
+    assert len(bad) >= 3
+
+
+def test_rl005_good_twin_clean():
+    res = run_fixture("rl005")
+    assert not in_file(res.findings, "rl005/good.py")
+
+
+# --------------------------------------------------------------------------- #
+# suppression grammar
+# --------------------------------------------------------------------------- #
+def test_justified_suppression_silences():
+    res = run_fixture("suppress")
+    assert not in_file(res.findings, "suppress/ok.py")
+    assert res.suppressed >= 1
+
+
+def test_unjustified_suppression_is_rl000_and_does_not_silence():
+    res = run_fixture("suppress")
+    bad = in_file(res.findings, "suppress/bad.py")
+    assert any(f.checker == "RL000" for f in bad)
+    assert any(f.checker == "RL003" for f in bad)
+
+
+# --------------------------------------------------------------------------- #
+# the ratchet on the real tree
+# --------------------------------------------------------------------------- #
+def test_pyproject_config_block_parses():
+    raw = read_toml_section(REPO / "pyproject.toml")
+    assert raw["roots"] == ["src/repro"]
+    assert "repro.core.engine.fetch_stage" in raw["entrypoints"]
+    assert raw["ladder_base"] == 2
+
+
+def test_self_lint_src_repro_clean_modulo_baseline():
+    cfg = load_default_config(REPO)
+    res = lint_project(cfg)
+    assert res.n_reachable > 50, "call graph lost the engine roots"
+    assert res.ok, "new radslint findings:\n" + res.render()
+
+
+def test_engine_config_rejects_off_ladder_caps():
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.configs.rads import EngineConfig
+    with pytest.raises(ValueError, match="power of two"):
+        EngineConfig(fetch_cap=1000)
+    with pytest.raises(ValueError, match="power of two"):
+        EngineConfig(frontier_cap=0)
+    EngineConfig(fetch_cap=1 << 10)      # on the ladder: fine

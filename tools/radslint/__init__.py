@@ -1,0 +1,25 @@
+"""radslint — jit-safety, determinism and recompile-trigger static analysis
+for the RADS engine.
+
+The analyzer is purely AST based (it never imports the code under analysis):
+it builds a project index over the configured roots, roots a call graph at
+the jitted engine entry points, and runs five checkers over everything
+reachable inside a trace (plus the configured host-side hot loops):
+
+* RL001 — host syncs / tracer leaks inside jit-reachable code,
+* RL002 — recompile triggers (scalar jit params without ``static_argnames``,
+  closure-captured mutables, capacities off the power-of-two ladder),
+* RL003 — determinism hazards (``jnp.unique`` without ``size=``,
+  unannotated duplicate-index scatter-adds, set/dict iteration order
+  feeding array construction),
+* RL004 — stat-threading (every ``bytes_*``/``*_hits``/``*_probes``
+  WaveState field must reach ``finalize_wave`` and every configured
+  consumer),
+* RL005 — dtype hygiene (64-bit dtypes inside jitted code; x64 is off).
+
+See ``tools/radslint/README.md`` for the design note and the suppression
+grammar (``# radslint: allow[RLnnn] <justification>``).
+"""
+from tools.radslint.api import lint_project, load_default_config  # noqa: F401
+
+__version__ = "0.1.0"

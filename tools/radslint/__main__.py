@@ -1,0 +1,5 @@
+import sys
+
+from tools.radslint.cli import main
+
+sys.exit(main())

@@ -1,0 +1,84 @@
+"""radslint programmatic entry point (the CLI and the tests both use this)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from pathlib import Path
+
+from tools.radslint.baseline import (load_baseline, save_baseline,
+                                     split_by_baseline)
+from tools.radslint.callgraph import ProjectIndex, build_call_graph
+from tools.radslint.checkers import LintContext, run_checkers
+from tools.radslint.config import Config, load_config
+from tools.radslint.model import Finding, scan_suppressions
+from tools.radslint.taint import ClassRegistry
+
+
+@dataclass
+class LintResult:
+    findings: list[Finding] = field(default_factory=list)   # new (failing)
+    baselined: list[Finding] = field(default_factory=list)
+    suppressed: int = 0
+    n_reachable: int = 0
+    n_files: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def render(self) -> str:
+        lines = [f.render() for f in self.findings]
+        lines.append(
+            f"radslint: {len(self.findings)} new finding(s), "
+            f"{len(self.baselined)} baselined, {self.suppressed} "
+            f"suppressed inline ({self.n_files} files, "
+            f"{self.n_reachable} jit-reachable functions)")
+        return "\n".join(lines)
+
+
+def load_default_config(project_root: str | Path | None = None) -> Config:
+    """Config from ``<root>/pyproject.toml``; the root defaults to the
+    nearest ancestor of cwd that has a pyproject.toml."""
+    if project_root is None:
+        cur = Path.cwd()
+        for cand in [cur, *cur.parents]:
+            if (cand / "pyproject.toml").exists():
+                cur = cand
+                break
+        project_root = cur
+    return load_config(Path(project_root))
+
+
+def lint_project(cfg: Config, use_baseline: bool = True,
+                 update_baseline: bool = False) -> LintResult:
+    index = ProjectIndex(cfg)
+    graph = build_call_graph(index)
+    ctx = LintContext(cfg=cfg, index=index, graph=graph,
+                      reg=ClassRegistry(index))
+    raw = run_checkers(ctx)
+
+    res = LintResult(n_reachable=len(graph.reachable),
+                     n_files=len(index.modules))
+
+    # inline suppressions (and their RL000 twins for missing justifications)
+    sups = {mod.rel: scan_suppressions(mod.rel, mod.source)
+            for mod in index.modules.values()}
+    kept: list[Finding] = []
+    for f in raw:
+        sup = sups.get(f.file)
+        if sup is not None and sup.allows(f.line, f.checker):
+            res.suppressed += 1
+        else:
+            kept.append(f)
+    for sup in sups.values():
+        kept.extend(sup.invalid)
+    kept.sort(key=lambda f: (f.file, f.line, f.checker))
+
+    bl_path = cfg.project_root / cfg.baseline
+    if update_baseline:
+        save_baseline(bl_path, cfg.project_root, kept)
+        res.baselined = kept
+        return res
+    baseline = load_baseline(bl_path) if use_baseline else set()
+    res.findings, res.baselined = split_by_baseline(
+        cfg.project_root, kept, baseline)
+    return res

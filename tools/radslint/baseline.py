@@ -1,0 +1,60 @@
+"""The zero-new-findings ratchet.
+
+``baseline.json`` holds the accepted pre-existing findings; anything not in
+it fails the lint.  Entries are keyed by ``(file, checker, stripped line
+text)`` — line-number free, so unrelated edits cannot resurrect a baselined
+finding, while editing the offending line itself re-surfaces it.  The file
+is committed and should only ever shrink.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from tools.radslint.model import Finding
+
+VERSION = 1
+
+
+def _line_text(project_root: Path, finding: Finding,
+               cache: dict[str, list[str]]) -> str:
+    lines = cache.get(finding.file)
+    if lines is None:
+        p = project_root / finding.file
+        lines = cache[finding.file] = (
+            p.read_text().splitlines() if p.exists() else [])
+    if 1 <= finding.line <= len(lines):
+        return lines[finding.line - 1].strip()
+    return ""
+
+
+def load_baseline(path: Path) -> set[tuple[str, str, str]]:
+    if not path.exists():
+        return set()
+    data = json.loads(path.read_text())
+    return {(e["file"], e["checker"], e["text"])
+            for e in data.get("findings", [])}
+
+
+def save_baseline(path: Path, project_root: Path,
+                  findings: list[Finding]) -> None:
+    cache: dict[str, list[str]] = {}
+    entries = sorted({(f.file, f.checker,
+                       _line_text(project_root, f, cache))
+                      for f in findings})
+    path.write_text(json.dumps(
+        {"version": VERSION,
+         "findings": [{"file": a, "checker": b, "text": c}
+                      for a, b, c in entries]}, indent=2) + "\n")
+
+
+def split_by_baseline(project_root: Path, findings: list[Finding],
+                      baseline: set[tuple[str, str, str]]
+                      ) -> tuple[list[Finding], list[Finding]]:
+    """-> (new, baselined)."""
+    cache: dict[str, list[str]] = {}
+    new, old = [], []
+    for f in findings:
+        key = f.baseline_key(_line_text(project_root, f, cache))
+        (old if key in baseline else new).append(f)
+    return new, old

@@ -1,0 +1,259 @@
+"""Project index and the jit-rooted call graph.
+
+The analyzer never imports the code under analysis: every file under the
+configured roots is parsed, functions (including nested defs and methods)
+are indexed under dotted qualnames derived from the file path, and a call
+graph is rooted at
+
+* the configured entry points (``[tool.radslint] entrypoints``),
+* every function decorated ``@jax.jit`` / ``@partial(jax.jit, ...)``, and
+* every Name or lambda passed directly to a ``jax.jit(...)`` call site
+  (the :class:`StageRunner` jit-cache pattern).
+
+Reachability is conservative: plain-name calls resolve through module scope
+and the import map; ``mod.fn`` attribute calls resolve through imported
+modules; bare method calls match every indexed method of that name; and any
+function *referenced* as a call argument (``jax.vmap(f)``, ``lax.scan(f,
+...)``) is treated as called.  Over-approximation only ever costs a
+suppression comment — under-approximation would cost a missed host sync.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+
+from tools.radslint.config import Config
+from tools.radslint.model import relpath
+
+FunctionNode = ast.FunctionDef | ast.AsyncFunctionDef | ast.Lambda
+
+
+@dataclass
+class FuncInfo:
+    qualname: str                  # e.g. repro.core.engine.fetch_stage
+    name: str                      # bare name ("<lambda>" for lambdas)
+    module: "ModuleInfo"
+    node: FunctionNode
+    is_method: bool = False
+
+
+@dataclass
+class ModuleInfo:
+    path: Path
+    rel: str                       # project-root-relative posix path
+    qualname: str                  # dotted module name
+    source: str
+    tree: ast.Module
+    funcs: dict[str, FuncInfo] = field(default_factory=dict)
+    imports: dict[str, str] = field(default_factory=dict)
+    classes: dict[str, ast.ClassDef] = field(default_factory=dict)
+
+
+class _Collector(ast.NodeVisitor):
+    def __init__(self, mod: ModuleInfo):
+        self.mod = mod
+        self.stack: list[tuple[str, str]] = []   # (kind, name)
+
+    def _def(self, node: FunctionNode, name: str) -> None:
+        qual = ".".join([self.mod.qualname] +
+                        [n for _, n in self.stack] + [name])
+        self.mod.funcs[qual] = FuncInfo(
+            qualname=qual, name=name, module=self.mod, node=node,
+            is_method=bool(self.stack) and self.stack[-1][0] == "class")
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._def(node, node.name)
+        self.stack.append(("func", node.name))
+        self.generic_visit(node)
+        self.stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        if not self.stack:
+            self.mod.classes[node.name] = node
+        self.stack.append(("class", node.name))
+        self.generic_visit(node)
+        self.stack.pop()
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for a in node.names:
+            self.mod.imports[a.asname or a.name.split(".")[0]] = (
+                a.name if a.asname else a.name.split(".")[0])
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if node.level:                       # relative import
+            parts = self.mod.qualname.split(".")[:-node.level]
+            base = ".".join(parts + ([node.module] if node.module else []))
+        else:
+            base = node.module or ""
+        for a in node.names:
+            if a.name == "*":
+                continue
+            self.mod.imports[a.asname or a.name] = f"{base}.{a.name}"
+
+
+class ProjectIndex:
+    def __init__(self, cfg: Config):
+        self.cfg = cfg
+        self.modules: dict[str, ModuleInfo] = {}       # qualname -> info
+        self.funcs: dict[str, FuncInfo] = {}           # qualname -> info
+        self.methods_by_name: dict[str, list[FuncInfo]] = {}
+        for root in cfg.roots:
+            for path in sorted((cfg.project_root / root).rglob("*.py")):
+                self._add(path)
+
+    def _module_qualname(self, path: Path) -> str:
+        resolved = path.resolve()
+        for base in self.cfg.import_roots + [""]:
+            basep = (self.cfg.project_root / base).resolve()
+            try:
+                rel = resolved.relative_to(basep)
+            except ValueError:
+                continue
+            return ".".join(rel.with_suffix("").parts)
+        return path.stem
+
+    def _add(self, path: Path) -> None:
+        source = path.read_text()
+        mod = ModuleInfo(path=path,
+                         rel=relpath(path, self.cfg.project_root),
+                         qualname=self._module_qualname(path),
+                         source=source, tree=ast.parse(source))
+        _Collector(mod).visit(mod.tree)
+        self.modules[mod.qualname] = mod
+        for q, fi in mod.funcs.items():
+            self.funcs[q] = fi
+            if fi.is_method:
+                self.methods_by_name.setdefault(fi.name, []).append(fi)
+
+    # ---- resolution ---------------------------------------------------- #
+
+    def resolve(self, qualified: str) -> FuncInfo | None:
+        return self.funcs.get(qualified)
+
+    def resolve_name(self, mod: ModuleInfo, name: str) -> FuncInfo | None:
+        """A bare ``name`` used in ``mod``: module-level def, then imports."""
+        hit = self.funcs.get(f"{mod.qualname}.{name}")
+        if hit is not None:
+            return hit
+        target = mod.imports.get(name)
+        return self.funcs.get(target) if target else None
+
+    def resolve_call(self, mod: ModuleInfo, call: ast.Call) -> list[FuncInfo]:
+        fn = call.func
+        out: list[FuncInfo] = []
+        if isinstance(fn, ast.Name):
+            hit = self.resolve_name(mod, fn.id)
+            if hit:
+                out.append(hit)
+        elif isinstance(fn, ast.Attribute):
+            if isinstance(fn.value, ast.Name):
+                target = mod.imports.get(fn.value.id)
+                if target and target in self.modules:
+                    hit = self.funcs.get(f"{target}.{fn.attr}")
+                    if hit:
+                        out.append(hit)
+                        return out
+            # bare method call: conservatively fan out to every indexed
+            # method with this name (self.foo(), runner.fetch(), ...)
+            out.extend(self.methods_by_name.get(fn.attr, []))
+        # functions passed as values (vmap/scan/shard_map/cond operands)
+        for arg in list(call.args) + [kw.value for kw in call.keywords]:
+            if isinstance(arg, ast.Name):
+                hit = self.resolve_name(mod, arg.id)
+                if hit:
+                    out.append(hit)
+        return out
+
+
+def _is_jax_jit(expr: ast.expr, mod: ModuleInfo) -> bool:
+    """``jax.jit`` / ``jit`` (imported from jax) as an expression."""
+    if isinstance(expr, ast.Attribute) and expr.attr == "jit" and \
+            isinstance(expr.value, ast.Name) and \
+            mod.imports.get(expr.value.id, expr.value.id) == "jax":
+        return True
+    if isinstance(expr, ast.Name):
+        return mod.imports.get(expr.id) == "jax.jit"
+    return False
+
+
+def _jit_decorated(fi: FuncInfo) -> bool:
+    if isinstance(fi.node, ast.Lambda):
+        return False
+    for dec in fi.node.decorator_list:
+        if _is_jax_jit(dec, fi.module):
+            return True
+        if isinstance(dec, ast.Call):
+            if _is_jax_jit(dec.func, fi.module):
+                return True
+            # @partial(jax.jit, static_argnames=...)
+            if isinstance(dec.func, ast.Name) and \
+                    dec.func.id == "partial" and dec.args and \
+                    _is_jax_jit(dec.args[0], fi.module):
+                return True
+    return False
+
+
+@dataclass
+class CallGraph:
+    index: ProjectIndex
+    reachable: dict[str, FuncInfo]          # jit-reachable functions
+    roots: dict[str, FuncInfo]
+    jit_defs: dict[str, FuncInfo]           # directly @jax.jit-decorated
+
+    def by_module(self) -> dict[ModuleInfo, list[FuncInfo]]:
+        out: dict[ModuleInfo, list[FuncInfo]] = {}
+        for fi in self.reachable.values():
+            out.setdefault(fi.module, []).append(fi)
+        return out
+
+
+def build_call_graph(index: ProjectIndex) -> CallGraph:
+    roots: dict[str, FuncInfo] = {}
+    jit_defs: dict[str, FuncInfo] = {}
+
+    for ep in index.cfg.entrypoints:
+        fi = index.resolve(ep)
+        if fi is not None:
+            roots[fi.qualname] = fi
+
+    for q, fi in index.funcs.items():
+        if _jit_decorated(fi):
+            roots[q] = fi
+            jit_defs[q] = fi
+
+    # jax.jit(...) call sites: Name or lambda first argument becomes a root
+    for mod in index.modules.values():
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call) and
+                    _is_jax_jit(node.func, mod) and node.args):
+                continue
+            arg = node.args[0]
+            if isinstance(arg, ast.Name):
+                hit = index.resolve_name(mod, arg.id)
+                if hit:
+                    roots[hit.qualname] = hit
+            elif isinstance(arg, ast.Lambda):
+                q = f"{mod.qualname}.<jit-lambda@L{arg.lineno}>"
+                fi = FuncInfo(qualname=q, name="<lambda>",
+                              module=mod, node=arg)
+                mod.funcs[q] = fi
+                index.funcs[q] = fi
+                roots[q] = fi
+
+    reachable: dict[str, FuncInfo] = {}
+    work = list(roots.values())
+    while work:
+        fi = work.pop()
+        if fi.qualname in reachable:
+            continue
+        reachable[fi.qualname] = fi
+        for node in ast.walk(fi.node):
+            if isinstance(node, ast.Call):
+                for callee in index.resolve_call(fi.module, node):
+                    if callee.qualname not in reachable:
+                        work.append(callee)
+    return CallGraph(index=index, reachable=reachable,
+                     roots=roots, jit_defs=jit_defs)

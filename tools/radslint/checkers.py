@@ -1,0 +1,447 @@
+"""The five radslint checkers (see package docstring and README).
+
+Each checker is a pure function ``(LintContext) -> list[Finding]``; the
+orchestration (suppressions, baseline, output) lives in ``api.py``.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+
+from tools.radslint.callgraph import CallGraph, FuncInfo, ProjectIndex
+from tools.radslint.config import Config
+from tools.radslint.model import Finding
+from tools.radslint.taint import (ClassRegistry, FunctionTaint, Taint,
+                                  dotted_name)
+
+_JNP_CONSTRUCTORS = {"jax.numpy.array", "jax.numpy.asarray",
+                     "jax.numpy.stack", "jax.numpy.concatenate"}
+_SCATTER_METHODS = {"add", "mul", "max", "min"}
+_WIDE_DTYPES = {"int64", "float64", "uint64"}
+
+
+@dataclass
+class LintContext:
+    cfg: Config
+    index: ProjectIndex
+    graph: CallGraph
+    reg: ClassRegistry
+    taints: dict[str, FunctionTaint] = field(default_factory=dict)
+    hot_taints: dict[str, FunctionTaint] = field(default_factory=dict)
+
+    def taint_for(self, fi: FuncInfo) -> FunctionTaint:
+        ft = self.taints.get(fi.qualname)
+        if ft is None:
+            ft = self.taints[fi.qualname] = FunctionTaint(
+                fi, self.index, self.reg)
+        return ft
+
+    def hot_taint_for(self, fi: FuncInfo) -> FunctionTaint:
+        ft = self.hot_taints.get(fi.qualname)
+        if ft is None:
+            ft = self.hot_taints[fi.qualname] = FunctionTaint(
+                fi, self.index, self.reg,
+                hot_traced_calls=set(self.cfg.hot_traced_calls))
+        return ft
+
+
+def _hot_funcs(ctx: LintContext) -> list[FuncInfo]:
+    return [fi for q in ctx.cfg.hot_loops
+            if (fi := ctx.index.resolve(q)) is not None]
+
+
+# --------------------------------------------------------------------------- #
+# RL001 — host sync / tracer leak
+# --------------------------------------------------------------------------- #
+def check_rl001(ctx: LintContext) -> list[Finding]:
+    out: list[Finding] = []
+    for fi in ctx.graph.reachable.values():
+        out += _rl001_walk(ctx, fi, ctx.taint_for(fi), where="jit-reachable",
+                           strict_item=True)
+    for fi in _hot_funcs(ctx):
+        if fi.qualname in ctx.graph.reachable:
+            continue
+        out += _rl001_walk(ctx, fi, ctx.hot_taint_for(fi),
+                           where="hot wave loop", strict_item=False)
+    return out
+
+
+def _rl001_walk(ctx: LintContext, fi: FuncInfo, ft: FunctionTaint,
+                where: str, strict_item: bool) -> list[Finding]:
+    out: list[Finding] = []
+    rel = fi.module.rel
+
+    def emit(node, msg, hint):
+        out.append(Finding("RL001", rel, node.lineno,
+                           f"{msg} [{where}: {fi.qualname}]", hint))
+
+    for node in ast.walk(fi.node):
+        if isinstance(node, (ast.If, ast.While)):
+            if ft.taint(node.test) == Taint.TRACED:
+                kw = "while" if isinstance(node, ast.While) else "if"
+                emit(node.test, f"Python `{kw}` branches on a traced value",
+                     "use jnp.where / lax.cond, or device_get once at the "
+                     "drain point")
+        elif isinstance(node, ast.IfExp):
+            if ft.taint(node.test) == Taint.TRACED:
+                emit(node.test, "conditional expression on a traced value",
+                     "use jnp.where(cond, a, b)")
+        elif isinstance(node, ast.For):
+            if ft.taint(node.iter) == Taint.TRACED:
+                emit(node.iter, "Python `for` iterates a traced value",
+                     "use lax.scan / lax.fori_loop, or iterate a static "
+                     "shape-derived range")
+        elif isinstance(node, ast.Call):
+            name = dotted_name(node.func, fi.module)
+            args = list(node.args) + [kw.value for kw in node.keywords]
+            traced_arg = any(ft.taint(a) == Taint.TRACED for a in args)
+            if name in ("int", "float", "bool", "len") and traced_arg:
+                emit(node, f"`{name}()` on a traced value forces a host "
+                     "sync", "keep it on device, or batch the transfer "
+                     "with jax.device_get at the wave drain point")
+            elif name is not None and name.startswith("numpy.") and \
+                    traced_arg:
+                emit(node, f"`{name.replace('numpy.', 'np.')}` call on a "
+                     "traced value pulls it to host",
+                     "use the jnp equivalent, or jax.device_get once")
+            elif isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in ("item", "tolist"):
+                base = ft.taint(node.func.value)
+                if base == Taint.TRACED or (strict_item and
+                                            base == Taint.UNKNOWN):
+                    emit(node, f"`.{node.func.attr}()` forces a host sync",
+                         "thread the value through the returned state "
+                         "instead of reading it mid-trace")
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# RL002 — recompile triggers
+# --------------------------------------------------------------------------- #
+def _fold_int(e: ast.expr):
+    if isinstance(e, ast.Constant) and type(e.value) is int:
+        return e.value
+    if isinstance(e, ast.UnaryOp) and isinstance(e.op, ast.USub):
+        v = _fold_int(e.operand)
+        return -v if v is not None else None
+    if isinstance(e, ast.BinOp):
+        lv, rv = _fold_int(e.left), _fold_int(e.right)
+        if lv is None or rv is None:
+            return None
+        ops = {ast.LShift: lambda a, b: a << b,
+               ast.RShift: lambda a, b: a >> b,
+               ast.Mult: lambda a, b: a * b,
+               ast.Add: lambda a, b: a + b,
+               ast.Sub: lambda a, b: a - b,
+               ast.Pow: lambda a, b: a ** b,
+               ast.FloorDiv: lambda a, b: a // b if b else None}
+        fn = ops.get(type(e.op))
+        return fn(lv, rv) if fn else None
+    return None
+
+
+def _on_ladder(v: int, base: int) -> bool:
+    if v < 1:
+        return False
+    while v % base == 0:
+        v //= base
+    return v == 1
+
+
+def _static_names(fi: FuncInfo) -> set[str]:
+    """Names in static_argnames of a @jax.jit/@partial(jax.jit,...) def."""
+    names: set[str] = set()
+    if isinstance(fi.node, ast.Lambda):
+        return names
+    for dec in fi.node.decorator_list:
+        if not isinstance(dec, ast.Call):
+            continue
+        for kw in dec.keywords:
+            if kw.arg == "static_argnames":
+                if isinstance(kw.value, ast.Constant) and \
+                        isinstance(kw.value.value, str):
+                    names.add(kw.value.value)
+                elif isinstance(kw.value, (ast.Tuple, ast.List)):
+                    names |= {el.value for el in kw.value.elts
+                              if isinstance(el, ast.Constant)}
+    return names
+
+
+def check_rl002(ctx: LintContext) -> list[Finding]:
+    out: list[Finding] = []
+    cap_re = ctx.cfg.cap_re()
+    base = ctx.cfg.ladder_base
+
+    # (a) scalar params of directly-jitted defs must be static_argnames
+    for fi in ctx.graph.jit_defs.values():
+        statics = _static_names(fi)
+        a = fi.node.args
+        for p in list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs):
+            if p.annotation is None or p.arg in statics:
+                continue
+            ann = ast.unparse(p.annotation).strip()
+            if ann in ("int", "bool", "str"):
+                out.append(Finding(
+                    "RL002", fi.module.rel, p.lineno,
+                    f"jitted `{fi.name}` takes Python scalar `{p.arg}: "
+                    f"{ann}` without static_argnames — every new value "
+                    "re-traces",
+                    "add it to static_argnames, or pass a device array"))
+
+    for mod in ctx.index.modules.values():
+        # (b) jit lambdas must not close over mutable locals
+        mutable_bindings = _mutable_local_bindings(mod.tree)
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) and node.args and \
+                    isinstance(node.args[0], ast.Lambda):
+                name = dotted_name(node.func, mod)
+                if name not in ("jax.jit", "jit"):
+                    continue
+                lam = node.args[0]
+                params = {p.arg for p in lam.args.args +
+                          lam.args.posonlyargs + lam.args.kwonlyargs}
+                for free in ast.walk(lam.body):
+                    if isinstance(free, ast.Name) and \
+                            isinstance(free.ctx, ast.Load) and \
+                            free.id not in params and \
+                            free.id in mutable_bindings:
+                        out.append(Finding(
+                            "RL002", mod.rel, lam.lineno,
+                            f"jit lambda closes over mutable `{free.id}` — "
+                            "identity changes silently re-trace",
+                            "close over immutables (tuple / frozen "
+                            "dataclass), or pass it as a pytree argument"))
+
+        # (c) literal capacities must sit on the escalation ladder
+        for node in ast.walk(mod.tree):
+            tgt_val: list[tuple[str, ast.expr, int]] = []
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        tgt_val.append((t.id, node.value, node.lineno))
+            elif isinstance(node, ast.AnnAssign) and \
+                    isinstance(node.target, ast.Name) and node.value:
+                tgt_val.append((node.target.id, node.value, node.lineno))
+            elif isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if kw.arg:
+                        tgt_val.append((kw.arg, kw.value, kw.value.lineno))
+            for name, value, lineno in tgt_val:
+                if not cap_re.search(name):
+                    continue
+                v = _fold_int(value)
+                if v is not None and not _on_ladder(v, base):
+                    out.append(Finding(
+                        "RL002", mod.rel, lineno,
+                        f"capacity `{name} = {v}` is off the power-of-"
+                        f"{base} escalation ladder — warm-started caps "
+                        "will never hit the jit cache",
+                        f"round up to {_next_ladder(v, base)}"))
+    return out
+
+
+def _next_ladder(v: int, base: int) -> int:
+    out = 1
+    while out < max(v, 1):
+        out *= base
+    return out
+
+
+def _mutable_local_bindings(tree: ast.Module) -> set[str]:
+    out: set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        mutable = isinstance(node.value, (ast.List, ast.Dict, ast.Set,
+                                          ast.ListComp, ast.DictComp,
+                                          ast.SetComp)) or (
+            isinstance(node.value, ast.Call) and
+            isinstance(node.value.func, ast.Name) and
+            node.value.func.id in ("list", "dict", "set", "bytearray"))
+        if mutable:
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# RL003 — determinism hazards
+# --------------------------------------------------------------------------- #
+def _set_derived(e: ast.expr) -> bool:
+    if isinstance(e, (ast.Set, ast.SetComp, ast.DictComp)):
+        return True
+    if isinstance(e, ast.Call):
+        if isinstance(e.func, ast.Name) and \
+                e.func.id in ("set", "frozenset"):
+            return True
+        if isinstance(e.func, ast.Attribute) and \
+                e.func.attr in ("keys", "values", "items"):
+            return True
+    return False
+
+
+def _const_index(e: ast.expr) -> bool:
+    if isinstance(e, (ast.Constant, ast.Slice)):
+        return True
+    if isinstance(e, ast.Tuple):
+        return all(_const_index(el) for el in e.elts)
+    if isinstance(e, ast.UnaryOp):
+        return _const_index(e.operand)
+    return False
+
+
+def check_rl003(ctx: LintContext) -> list[Finding]:
+    out: list[Finding] = []
+    for fi in ctx.graph.reachable.values():
+        rel = fi.module.rel
+        for node in ast.walk(fi.node):
+            if isinstance(node, ast.For) and _set_derived(node.iter):
+                out.append(Finding(
+                    "RL003", rel, node.iter.lineno,
+                    "iteration order of a set/dict feeds traced code "
+                    f"[{fi.qualname}]",
+                    "iterate a sorted(...) or an ordered sequence"))
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func, fi.module)
+            if name == "jax.numpy.unique":
+                if not any(kw.arg == "size" for kw in node.keywords):
+                    out.append(Finding(
+                        "RL003", rel, node.lineno,
+                        f"jnp.unique without size= [{fi.qualname}] — "
+                        "output shape becomes data-dependent",
+                        "pass size=<cap>, fill_value=<sentinel>"))
+            if name in _JNP_CONSTRUCTORS and \
+                    any(_set_derived(a) for a in node.args):
+                out.append(Finding(
+                    "RL003", rel, node.lineno,
+                    "array built from set/dict iteration order "
+                    f"[{fi.qualname}]",
+                    "sort first — device arrays must not depend on hash "
+                    "order"))
+            # X.at[idx].add(...) with a data-dependent idx
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in _SCATTER_METHODS and \
+                    isinstance(node.func.value, ast.Subscript) and \
+                    isinstance(node.func.value.value, ast.Attribute) and \
+                    node.func.value.value.attr == "at":
+                idx = node.func.value.slice
+                kws = {kw.arg for kw in node.keywords}
+                if not _const_index(idx) and \
+                        not ({"unique_indices", "mode"} & kws):
+                    out.append(Finding(
+                        "RL003", rel, node.lineno,
+                        f".at[].{node.func.attr} scatter with potentially "
+                        f"duplicate indices [{fi.qualname}]",
+                        "pass unique_indices=True or mode=..., or suppress "
+                        "with a justification if duplicates are summed "
+                        "deterministically (integer adds)"))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# RL004 — stat threading
+# --------------------------------------------------------------------------- #
+def check_rl004(ctx: LintContext) -> list[Finding]:
+    cfg = ctx.cfg
+    if not cfg.stat_state or "." not in cfg.stat_state:
+        return []
+    mod_q, clsname = cfg.stat_state.rsplit(".", 1)
+    mod = ctx.index.modules.get(mod_q)
+    if mod is None:
+        return []
+    pats = cfg.stat_res()
+    fields = [(f, ln) for f, ln in ctx.reg.stat_fields(clsname)
+              if any(p.search(f) for p in pats)]
+
+    fin = ctx.index.resolve(cfg.stat_finalizer) if cfg.stat_finalizer else None
+    fin_names: set[str] = set()
+    if fin is not None:
+        for node in ast.walk(fin.node):
+            if isinstance(node, ast.keyword) and node.arg:
+                fin_names.add(node.arg)
+            elif isinstance(node, ast.Attribute):
+                fin_names.add(node.attr)
+            elif isinstance(node, ast.Constant) and \
+                    isinstance(node.value, str):
+                fin_names.add(node.value)
+
+    consumers: list[tuple[str, str]] = []
+    for relp in cfg.stat_consumers:
+        p = cfg.project_root / relp
+        consumers.append((relp, p.read_text() if p.exists() else ""))
+
+    out: list[Finding] = []
+    for f, ln in fields:
+        if fin is not None and f not in fin_names:
+            out.append(Finding(
+                "RL004", mod.rel, ln,
+                f"stat field `{clsname}.{f}` never reaches "
+                f"`{cfg.stat_finalizer.rsplit('.', 1)[-1]}`",
+                "thread it into the finalized stats dict"))
+        for relp, text in consumers:
+            if not re.search(rf"\b{re.escape(f)}\b", text):
+                out.append(Finding(
+                    "RL004", mod.rel, ln,
+                    f"stat field `{clsname}.{f}` is not consumed in "
+                    f"{relp}",
+                    "surface it (driver stats key / benchmark column) or "
+                    "drop the field"))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# RL005 — dtype hygiene
+# --------------------------------------------------------------------------- #
+def check_rl005(ctx: LintContext) -> list[Finding]:
+    out: list[Finding] = []
+    for fi in ctx.graph.reachable.values():
+        rel = fi.module.rel
+        for node in ast.walk(fi.node):
+            if isinstance(node, ast.Attribute) and \
+                    node.attr in _WIDE_DTYPES:
+                base = dotted_name(node.value, fi.module)
+                if base in ("jax.numpy", "numpy"):
+                    out.append(Finding(
+                        "RL005", rel, node.lineno,
+                        f"64-bit dtype `{node.attr}` inside jitted code "
+                        f"[{fi.qualname}] — x64 is disabled, this "
+                        "silently truncates (or forces x64 on)",
+                        "use the 32-bit dtype"))
+            elif isinstance(node, ast.Call):
+                wide = []
+                if isinstance(node.func, ast.Attribute) and \
+                        node.func.attr == "astype":
+                    wide += [a for a in node.args
+                             if isinstance(a, ast.Constant) and
+                             a.value in _WIDE_DTYPES]
+                wide += [kw.value for kw in node.keywords
+                         if kw.arg == "dtype" and
+                         isinstance(kw.value, ast.Constant) and
+                         kw.value.value in _WIDE_DTYPES]
+                for w in wide:
+                    out.append(Finding(
+                        "RL005", rel, node.lineno,
+                        f"64-bit dtype string {w.value!r} inside jitted "
+                        f"code [{fi.qualname}]",
+                        "use the 32-bit dtype"))
+    return out
+
+
+ALL_CHECKERS = (check_rl001, check_rl002, check_rl003, check_rl004,
+                check_rl005)
+
+
+def run_checkers(ctx: LintContext) -> list[Finding]:
+    seen: set[tuple] = set()
+    out: list[Finding] = []
+    for chk in ALL_CHECKERS:
+        for f in chk(ctx):
+            key = (f.checker, f.file, f.line, f.message)
+            if key not in seen:
+                seen.add(key)
+                out.append(f)
+    out.sort(key=lambda f: (f.file, f.line, f.checker))
+    return out

@@ -1,0 +1,36 @@
+"""Command line interface: ``python -m tools.radslint [options]``."""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from tools.radslint.api import lint_project, load_default_config
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="radslint",
+        description="jit-safety / determinism / recompile-trigger static "
+                    "analysis for the RADS engine")
+    ap.add_argument("--project-root", default=None,
+                    help="repo root (default: nearest pyproject.toml)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, ignoring baseline.json")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite baseline.json from the current findings "
+                         "(the ratchet should only ever shrink)")
+    args = ap.parse_args(argv)
+
+    cfg = load_default_config(args.project_root)
+    res = lint_project(cfg, use_baseline=not args.no_baseline,
+                       update_baseline=args.update_baseline)
+    print(res.render())
+    if args.update_baseline:
+        print(f"baseline updated: {cfg.baseline} "
+              f"({len(res.baselined)} entries)")
+        return 0
+    return 0 if res.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,133 @@
+"""radslint configuration: the ``[tool.radslint]`` block of pyproject.toml.
+
+The container python is 3.10 (no :mod:`tomllib`), so a minimal TOML-subset
+reader lives here: it understands exactly the shapes the config block uses
+— ``[section]`` headers, ``key = "string"``, ``key = int``, ``key = bool``
+and (possibly multi-line) ``key = [ "...", ... ]`` string/int lists.  That
+is deliberately all of it; anything fancier belongs in a real TOML parser.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+
+_SECTION = "tool.radslint"
+
+
+@dataclass
+class Config:
+    """Resolved analyzer configuration (paths relative to ``project_root``)."""
+
+    project_root: Path
+    # directories scanned and indexed (package code under analysis)
+    roots: list[str] = field(default_factory=lambda: ["src/repro"])
+    # sys.path-style bases used to turn file paths into module qualnames
+    import_roots: list[str] = field(default_factory=lambda: ["src"])
+    # qualified functions that root the jit call graph (additional roots are
+    # discovered from @jax.jit decorators and jax.jit(...) call sites)
+    entrypoints: list[str] = field(default_factory=list)
+    # host-side functions whose device round-trips RL001 also polices
+    hot_loops: list[str] = field(default_factory=list)
+    # call names whose results are device values inside a hot loop
+    hot_traced_calls: list[str] = field(default_factory=list)
+    # RL002: capacity ladder base and the name pattern of capacity knobs
+    ladder_base: int = 2
+    cap_name_pattern: str = r"(^|_)cap$"
+    # RL004: the stat-carrying state class, its drain point, and the files
+    # that must consume every matching field
+    stat_state: str = ""
+    stat_finalizer: str = ""
+    stat_field_patterns: list[str] = field(
+        default_factory=lambda: [r"^bytes_", r"_hits$", r"_probes$"])
+    stat_consumers: list[str] = field(default_factory=list)
+    # zero-findings ratchet file
+    baseline: str = "tools/radslint/baseline.json"
+
+    def cap_re(self) -> re.Pattern:
+        return re.compile(self.cap_name_pattern)
+
+    def stat_res(self) -> list[re.Pattern]:
+        return [re.compile(p) for p in self.stat_field_patterns]
+
+
+class ConfigError(ValueError):
+    pass
+
+
+def _parse_scalar(text: str):
+    text = text.strip()
+    if (text.startswith('"') and text.endswith('"')) or (
+            text.startswith("'") and text.endswith("'")):
+        return text[1:-1]
+    if text in ("true", "false"):
+        return text == "true"
+    try:
+        return int(text, 0)
+    except ValueError:
+        raise ConfigError(f"unsupported TOML value: {text!r}") from None
+
+
+def _parse_list(text: str) -> list:
+    body = text.strip()
+    assert body.startswith("[") and body.endswith("]")
+    items, depth, cur = [], 0, ""
+    for ch in body[1:-1]:
+        if ch == "," and depth == 0:
+            if cur.strip():
+                items.append(_parse_scalar(cur))
+            cur = ""
+        else:
+            if ch in "[{":
+                depth += 1
+            elif ch in "]}":
+                depth -= 1
+            cur += ch
+    if cur.strip():
+        items.append(_parse_scalar(cur))
+    return items
+
+
+def read_toml_section(path: Path, section: str = _SECTION) -> dict:
+    """Read one ``[section]`` of a TOML file with the subset grammar above."""
+    out: dict = {}
+    in_section = False
+    pending_key, pending_val = None, ""
+    for raw in path.read_text().splitlines():
+        line = raw.split("#", 1)[0].rstrip() if '"' not in raw else raw.rstrip()
+        if pending_key is not None:
+            pending_val += " " + line.strip()
+            if pending_val.count("[") == pending_val.count("]"):
+                out[pending_key] = _parse_list(pending_val)
+                pending_key, pending_val = None, ""
+            continue
+        stripped = line.strip()
+        if stripped.startswith("["):
+            in_section = stripped == f"[{section}]"
+            continue
+        if not in_section or not stripped or stripped.startswith("#"):
+            continue
+        if "=" not in stripped:
+            raise ConfigError(f"cannot parse TOML line: {raw!r}")
+        key, val = (s.strip() for s in stripped.split("=", 1))
+        if val.startswith("["):
+            if val.count("[") == val.count("]"):
+                out[key] = _parse_list(val)
+            else:
+                pending_key, pending_val = key, val
+        else:
+            out[key] = _parse_scalar(val)
+    return out
+
+
+def load_config(project_root: Path, pyproject: Path | None = None) -> Config:
+    """Build a :class:`Config` from ``<project_root>/pyproject.toml``."""
+    project_root = Path(project_root).resolve()
+    path = pyproject or project_root / "pyproject.toml"
+    raw = read_toml_section(path) if path.exists() else {}
+    cfg = Config(project_root=project_root)
+    for key, val in raw.items():
+        if not hasattr(cfg, key):
+            raise ConfigError(f"unknown [tool.radslint] key: {key!r}")
+        setattr(cfg, key, val)
+    return cfg

@@ -1,0 +1,88 @@
+"""Findings and the inline suppression grammar.
+
+A finding is suppressed by a trailing (or immediately preceding) comment::
+
+    # radslint: allow[RL001] intentional wave-retire sync point
+    # radslint: allow[RL001,RL003] <justification>
+
+The justification is mandatory: an ``allow`` with no text after the bracket
+is itself reported as RL000 (invalid-suppression), so the committed code can
+never grow silent waivers.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+
+CHECKER_TITLES = {
+    "RL000": "invalid suppression",
+    "RL001": "host sync / tracer leak inside jit-reachable code",
+    "RL002": "recompile trigger",
+    "RL003": "nondeterminism hazard",
+    "RL004": "stat field not threaded end to end",
+    "RL005": "64-bit dtype inside jitted code (x64 is off)",
+}
+
+
+@dataclass(frozen=True)
+class Finding:
+    checker: str          # "RL001" ... "RL005" (or "RL000")
+    file: str             # path relative to project root, posix separators
+    line: int             # 1-based
+    message: str
+    hint: str = ""
+
+    def render(self) -> str:
+        out = f"{self.file}:{self.line}: {self.checker} {self.message}"
+        if self.hint:
+            out += f"\n    hint: {self.hint}"
+        return out
+
+    def baseline_key(self, line_text: str) -> tuple[str, str, str]:
+        """Line-number-free identity used by the ratchet file: moving code
+        around does not resurrect a baselined finding, editing the line does."""
+        return (self.file, self.checker, line_text.strip())
+
+
+_ALLOW_RE = re.compile(
+    r"#\s*radslint:\s*allow\[(?P<ids>RL\d{3}(?:\s*,\s*RL\d{3})*)\]"
+    r"(?P<just>[^#]*)")
+
+
+@dataclass
+class Suppressions:
+    """Per-file map of line -> allowed checker ids (with justifications)."""
+
+    by_line: dict[int, set[str]] = field(default_factory=dict)
+    invalid: list[Finding] = field(default_factory=list)
+
+    def allows(self, line: int, checker: str) -> bool:
+        # an allow comment covers its own line and the line directly below,
+        # so both trailing and preceding-line placement work
+        return (checker in self.by_line.get(line, ()) or
+                checker in self.by_line.get(line - 1, ()))
+
+
+def scan_suppressions(path: str, source: str) -> Suppressions:
+    sup = Suppressions()
+    for lineno, text in enumerate(source.splitlines(), start=1):
+        m = _ALLOW_RE.search(text)
+        if not m:
+            continue
+        ids = {s.strip() for s in m.group("ids").split(",")}
+        if not m.group("just").strip():
+            sup.invalid.append(Finding(
+                "RL000", path, lineno,
+                "suppression without a justification",
+                hint="write `# radslint: allow[RLnnn] <why this is safe>`"))
+            continue
+        sup.by_line.setdefault(lineno, set()).update(ids)
+    return sup
+
+
+def relpath(path: Path, root: Path) -> str:
+    try:
+        return path.resolve().relative_to(root).as_posix()
+    except ValueError:
+        return path.as_posix()

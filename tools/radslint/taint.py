@@ -1,0 +1,464 @@
+"""Intra-procedural taint analysis: which expressions hold traced values?
+
+Three-point lattice ``STATIC < UNKNOWN < TRACED``.  Checkers only ever fire
+on provably ``TRACED`` expressions (with narrow exceptions like ``.item()``),
+so the analysis is tuned to be *sound about STATIC*: anything it cannot
+prove host-side stays UNKNOWN and is never reported.  Sources of TRACED:
+
+* parameters annotated with jax array types (``jnp.ndarray``, ``jax.Array``),
+* fields of project dataclasses with such annotations (looked up through
+  the class AST, merged over same-named classes and subclasses, traced wins),
+* results of ``jnp.*`` / ``jax.lax.*`` / ``jax.vmap`` / project functions
+  with traced return annotations,
+* in *hot-loop* mode, results of the configured ``hot_traced_calls``
+  (``runner.fetch(...)``, ``finalize_wave(...)``, ...) — the host wave loop
+  handles device futures without being inside a trace itself.
+
+``x is None`` / ``x is not None`` is always STATIC (shape-level dispatch,
+not a value read), ``.shape``/``.ndim``/``.dtype``/``.size`` are STATIC,
+and ``jax.device_get(...)`` results are STATIC — it is the sanctioned
+batched transfer.
+"""
+from __future__ import annotations
+
+import ast
+from enum import IntEnum
+
+from tools.radslint.callgraph import FuncInfo, ModuleInfo, ProjectIndex
+
+
+class Taint(IntEnum):
+    STATIC = 0
+    UNKNOWN = 1
+    TRACED = 2
+
+
+class TV:
+    """A taint value, optionally carrying a project class for field lookup."""
+
+    __slots__ = ("taint", "cls")
+
+    def __init__(self, taint: Taint, cls: str | None = None):
+        self.taint = taint
+        self.cls = cls
+
+
+STATIC = TV(Taint.STATIC)
+UNKNOWN = TV(Taint.UNKNOWN)
+TRACED = TV(Taint.TRACED)
+
+_SCALAR_ANNS = {"int", "bool", "float", "str", "bytes", "None", "object",
+                "complex"}
+_STATIC_HEADS = ("tuple", "list", "dict", "set", "frozenset", "np.ndarray",
+                 "numpy.ndarray", "Path", "deque")
+_TRACED_MARKS = ("jnp.", "jax.Array", "ArrayLike")
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "sharding"}
+# jax callables whose results live on the host
+_JAX_STATIC_CALLS = {
+    "jax.default_backend", "jax.devices", "jax.device_count",
+    "jax.local_device_count", "jax.local_devices", "jax.device_get",
+    "jax.tree_util.tree_structure", "jax.eval_shape", "jax.named_scope",
+}
+_HOST_CASTS = {"int", "float", "bool", "len", "str", "repr", "format"}
+
+
+def dotted_name(expr: ast.expr, mod: ModuleInfo) -> str | None:
+    """``np.asarray`` -> ``numpy.asarray`` through the module's import map."""
+    parts: list[str] = []
+    while isinstance(expr, ast.Attribute):
+        parts.append(expr.attr)
+        expr = expr.value
+    if not isinstance(expr, ast.Name):
+        return None
+    base = mod.imports.get(expr.id, expr.id)
+    return ".".join([base] + parts[::-1])
+
+
+class ClassRegistry:
+    """Field / method-return annotations across all indexed classes, with
+    same-name merge and one-name-based subclass closure (traced wins)."""
+
+    def __init__(self, index: ProjectIndex):
+        self.index = index
+        self.by_name: dict[str, list[ast.ClassDef]] = {}
+        for mod in index.modules.values():
+            for name, cd in mod.classes.items():
+                self.by_name.setdefault(name, []).append(cd)
+        self.subs: dict[str, set[str]] = {n: {n} for n in self.by_name}
+        changed = True
+        while changed:
+            changed = False
+            for name, cds in self.by_name.items():
+                for cd in cds:
+                    for b in cd.bases:
+                        bn = b.id if isinstance(b, ast.Name) else (
+                            b.attr if isinstance(b, ast.Attribute) else None)
+                        if bn in self.subs and name not in self.subs[bn]:
+                            self.subs[bn].add(name)
+                            changed = True
+
+    def has(self, name: str) -> bool:
+        return name in self.by_name
+
+    def _defs(self, clsname: str) -> list[ast.ClassDef]:
+        return [cd for n in self.subs.get(clsname, {clsname})
+                for cd in self.by_name.get(n, [])]
+
+    def field_ann(self, clsname: str, attr: str) -> list[str]:
+        out = []
+        for cd in self._defs(clsname):
+            for st in cd.body:
+                if isinstance(st, ast.AnnAssign) and \
+                        isinstance(st.target, ast.Name) and \
+                        st.target.id == attr:
+                    out.append(ast.unparse(st.annotation))
+        return out
+
+    def method_return(self, clsname: str, attr: str) -> list[str]:
+        out = []
+        for cd in self._defs(clsname):
+            for st in cd.body:
+                if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and st.name == attr and st.returns is not None:
+                    out.append(ast.unparse(st.returns))
+        return out
+
+    def stat_fields(self, clsname: str) -> list[tuple[str, int]]:
+        """(field, lineno) for every annotated field of ``clsname`` itself."""
+        out = []
+        for cd in self.by_name.get(clsname, []):
+            for st in cd.body:
+                if isinstance(st, ast.AnnAssign) and \
+                        isinstance(st.target, ast.Name):
+                    out.append((st.target.id, st.lineno))
+        return out
+
+
+def classify_annotation(ann: str, reg: ClassRegistry) -> TV:
+    a = ann.strip().strip("'\"")
+    for wrap in ("Optional[", "ClassVar[", "Final["):
+        if a.startswith(wrap) and a.endswith("]"):
+            a = a[len(wrap):-1].strip()
+    if "|" in a:
+        parts = [p.strip() for p in a.split("|") if p.strip() != "None"]
+        if len(parts) != 1:
+            tvs = [classify_annotation(p, reg) for p in parts]
+            return TV(max(tv.taint for tv in tvs))
+        a = parts[0]
+    if any(m in a for m in _TRACED_MARKS) or a == "Array":
+        return TRACED
+    head = a.split("[")[0].strip()
+    if head in _SCALAR_ANNS or head in _STATIC_HEADS:
+        return STATIC
+    if reg.has(head):
+        return TV(Taint.STATIC, cls=head)
+    return UNKNOWN
+
+
+def _merge(a: TV, b: TV) -> TV:
+    if a.taint == b.taint and a.cls == b.cls:
+        return a
+    return TV(max(a.taint, b.taint),
+              a.cls if a.cls == b.cls else None)
+
+
+class FunctionTaint:
+    """One pass over a function body; records a TV per visited expression
+    node (keyed by identity), queryable by checkers afterwards."""
+
+    def __init__(self, fi: FuncInfo, index: ProjectIndex, reg: ClassRegistry,
+                 hot_traced_calls: set[str] = frozenset()):
+        self.fi = fi
+        self.mod = fi.module
+        self.index = index
+        self.reg = reg
+        self.hot_calls = set(hot_traced_calls)
+        self.cache: dict[int, TV] = {}
+        env = self._param_env(fi.node, fi)
+        body = fi.node.body
+        if isinstance(fi.node, ast.Lambda):
+            self._eval(fi.node.body, env)
+        else:
+            self._exec(body, env)
+
+    def taint(self, node: ast.AST) -> Taint:
+        return self.cache.get(id(node), UNKNOWN).taint
+
+    # -- seeding ---------------------------------------------------------- #
+
+    def _param_env(self, node, fi: FuncInfo) -> dict[str, TV]:
+        env: dict[str, TV] = {}
+        a = node.args
+        params = list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
+        # *args / **kwargs bind tuples/dicts: the container itself is
+        # structural (len() etc. are static) even when elements are traced
+        for p in (a.vararg, a.kwarg):
+            if p is not None:
+                env[p.arg] = STATIC
+        for i, p in enumerate(params):
+            if p.annotation is not None:
+                env[p.arg] = classify_annotation(
+                    ast.unparse(p.annotation), self.reg)
+            elif i == 0 and fi is not None and fi.is_method and \
+                    p.arg in ("self", "cls"):
+                cls = fi.qualname.split(".")[-2]
+                env[p.arg] = TV(Taint.STATIC, cls=cls)
+            else:
+                env[p.arg] = UNKNOWN
+        return env
+
+    # -- statements ------------------------------------------------------- #
+
+    def _exec(self, stmts: list[ast.stmt], env: dict[str, TV]) -> None:
+        for st in stmts:
+            self._stmt(st, env)
+
+    def _assign_target(self, tgt: ast.expr, tv: TV, env: dict,
+                       value: ast.expr | None = None) -> None:
+        if isinstance(tgt, ast.Name):
+            env[tgt.id] = tv
+        elif isinstance(tgt, (ast.Tuple, ast.List)):
+            vals = (value.elts if isinstance(value, (ast.Tuple, ast.List))
+                    and len(value.elts) == len(tgt.elts) else None)
+            for i, el in enumerate(tgt.elts):
+                etv = self.cache.get(id(vals[i]), tv) if vals else tv
+                self._assign_target(el, etv, env)
+        elif isinstance(tgt, ast.Starred):
+            self._assign_target(tgt.value, tv, env)
+        # Attribute / Subscript stores mutate objects we don't model
+
+    def _stmt(self, st: ast.stmt, env: dict[str, TV]) -> None:
+        if isinstance(st, ast.Assign):
+            tv = self._eval(st.value, env)
+            for tgt in st.targets:
+                self._assign_target(tgt, tv, env, st.value)
+        elif isinstance(st, ast.AnnAssign):
+            tv = classify_annotation(ast.unparse(st.annotation), self.reg)
+            if st.value is not None:
+                vtv = self._eval(st.value, env)
+                if tv.taint == Taint.UNKNOWN:
+                    tv = vtv
+            if isinstance(st.target, ast.Name):
+                env[st.target.id] = tv
+        elif isinstance(st, ast.AugAssign):
+            tv = self._eval(st.value, env)
+            if isinstance(st.target, ast.Name):
+                env[st.target.id] = _merge(env.get(st.target.id, UNKNOWN), tv)
+        elif isinstance(st, (ast.If, ast.While)):
+            self._eval(st.test, env)
+            b1, b2 = dict(env), dict(env)
+            self._exec(st.body, b1)
+            self._exec(st.orelse, b2)
+            for k in set(b1) | set(b2):
+                env[k] = _merge(b1.get(k, env.get(k, UNKNOWN)),
+                                b2.get(k, env.get(k, UNKNOWN)))
+        elif isinstance(st, ast.For):
+            self._eval(st.iter, env)
+            self._assign_target(st.target, self._elem(st.iter, env), env)
+            body = dict(env)
+            self._exec(st.body, body)
+            self._exec(st.orelse, body)
+            for k in set(body):
+                env[k] = _merge(body[k], env.get(k, body[k]))
+        elif isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            env[st.name] = STATIC
+            inner = dict(env)
+            inner.update(self._param_env(st, None))
+            self._exec(st.body, inner)
+        elif isinstance(st, ast.With):
+            for item in st.items:
+                self._eval(item.context_expr, env)
+            self._exec(st.body, env)
+        elif isinstance(st, ast.Try):
+            self._exec(st.body, env)
+            for h in st.handlers:
+                self._exec(h.body, env)
+            self._exec(st.orelse, env)
+            self._exec(st.finalbody, env)
+        elif isinstance(st, (ast.Expr, ast.Return)) and st.value is not None:
+            self._eval(st.value, env)
+        elif isinstance(st, ast.Assert):
+            self._eval(st.test, env)
+        elif isinstance(st, ast.Raise) and st.exc is not None:
+            self._eval(st.exc, env)
+        elif isinstance(st, ast.Delete):
+            for t in st.targets:
+                if isinstance(t, ast.Name):
+                    env.pop(t.id, None)
+
+    # -- expressions ------------------------------------------------------ #
+
+    def _elem(self, it: ast.expr, env: dict) -> TV:
+        """Element taint of an iterable expression (for-loop targets)."""
+        if isinstance(it, ast.Call):
+            name = dotted_name(it.func, self.mod)
+            if name == "range":
+                return STATIC
+            if name in ("enumerate", "zip", "reversed", "sorted", "map",
+                        "filter"):
+                tvs = [self._elem(a, env) for a in it.args
+                       if not isinstance(a, ast.Lambda)]
+                return TV(max((t.taint for t in tvs), default=Taint.UNKNOWN))
+        if isinstance(it, (ast.Tuple, ast.List)):
+            tvs = [self.cache.get(id(e), UNKNOWN) for e in it.elts]
+            return TV(max((t.taint for t in tvs), default=Taint.STATIC))
+        return self.cache.get(id(it), UNKNOWN)
+
+    def _eval(self, e: ast.expr, env: dict[str, TV]) -> TV:
+        tv = self._eval_inner(e, env)
+        self.cache[id(e)] = tv
+        return tv
+
+    def _eval_inner(self, e: ast.expr, env: dict[str, TV]) -> TV:
+        if isinstance(e, ast.Constant):
+            return STATIC
+        if isinstance(e, ast.Name):
+            if e.id in env:
+                return env[e.id]
+            if self.reg.has(e.id) or \
+                    self.index.resolve_name(self.mod, e.id) is not None:
+                return STATIC                      # class / function object
+            target = self.mod.imports.get(e.id)
+            return STATIC if target else UNKNOWN
+        if isinstance(e, ast.Attribute):
+            base = self._eval(e.value, env)
+            if e.attr in _STATIC_ATTRS:
+                return STATIC
+            if base.cls is not None:
+                anns = self.reg.field_ann(base.cls, e.attr)
+                if anns:
+                    tvs = [classify_annotation(a, self.reg) for a in anns]
+                    out = tvs[0]
+                    for t in tvs[1:]:
+                        out = _merge(out, t)
+                    return out
+                return UNKNOWN
+            if e.attr == "at":
+                return TRACED if base.taint == Taint.TRACED else base
+            return TV(base.taint)
+        if isinstance(e, ast.Subscript):
+            base = self._eval(e.value, env)
+            self._eval(e.slice, env)
+            return TV(base.taint)
+        if isinstance(e, ast.Call):
+            return self._call(e, env)
+        if isinstance(e, ast.BoolOp):
+            tvs = [self._eval(v, env) for v in e.values]
+            return TV(max(t.taint for t in tvs))
+        if isinstance(e, ast.BinOp):
+            lt = self._eval(e.left, env)
+            rt = self._eval(e.right, env)
+            return TV(max(lt.taint, rt.taint))
+        if isinstance(e, ast.UnaryOp):
+            return TV(self._eval(e.operand, env).taint)
+        if isinstance(e, ast.Compare):
+            tvs = [self._eval(e.left, env)]
+            tvs += [self._eval(c, env) for c in e.comparators]
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in e.ops):
+                return STATIC          # `x is None` dispatch, not a read
+            return TV(max(t.taint for t in tvs))
+        if isinstance(e, ast.IfExp):
+            self._eval(e.test, env)
+            return _merge(self._eval(e.body, env), self._eval(e.orelse, env))
+        if isinstance(e, (ast.Tuple, ast.List, ast.Set)):
+            tvs = [self._eval(el, env) for el in e.elts]
+            return TV(max((t.taint for t in tvs), default=Taint.STATIC))
+        if isinstance(e, ast.Dict):
+            tvs = [self._eval(v, env) for v in e.values if v is not None]
+            for k in e.keys:
+                if k is not None:
+                    self._eval(k, env)
+            return TV(max((t.taint for t in tvs), default=Taint.STATIC))
+        if isinstance(e, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                          ast.DictComp)):
+            inner = dict(env)
+            for gen in e.generators:
+                self._eval(gen.iter, inner)
+                self._assign_target(gen.target, self._elem(gen.iter, inner),
+                                    inner)
+                for cond in gen.ifs:
+                    self._eval(cond, inner)
+            if isinstance(e, ast.DictComp):
+                self._eval(e.key, inner)
+                return TV(self._eval(e.value, inner).taint)
+            return TV(self._eval(e.elt, inner).taint)
+        if isinstance(e, ast.Lambda):
+            inner = dict(env)
+            inner.update(self._param_env(e, None))
+            self._eval(e.body, inner)
+            return STATIC
+        if isinstance(e, ast.NamedExpr):
+            tv = self._eval(e.value, env)
+            self._assign_target(e.target, tv, env)
+            return tv
+        if isinstance(e, ast.Starred):
+            return self._eval(e.value, env)
+        if isinstance(e, ast.JoinedStr):
+            for v in e.values:
+                if isinstance(v, ast.FormattedValue):
+                    self._eval(v.value, env)
+            return STATIC
+        if isinstance(e, ast.Slice):
+            for part in (e.lower, e.upper, e.step):
+                if part is not None:
+                    self._eval(part, env)
+            return STATIC
+        return UNKNOWN
+
+    def _call(self, e: ast.Call, env: dict[str, TV]) -> TV:
+        arg_tvs = [self._eval(a, env) for a in e.args]
+        arg_tvs += [self._eval(kw.value, env) for kw in e.keywords]
+        arg_max = Taint(max((t.taint for t in arg_tvs), default=Taint.STATIC))
+        fn = e.func
+        name = dotted_name(fn, self.mod)
+
+        if name in _HOST_CASTS:
+            return STATIC
+        if name is not None:
+            if name in _JAX_STATIC_CALLS:
+                return STATIC
+            if name.startswith(("jax.numpy.", "jax.lax.", "jax.nn.",
+                                "jax.random.", "jax.scipy.")) or \
+                    name in ("jax.vmap", "jax.pmap", "jax.jit",
+                             "jax.checkpoint", "jax.grad"):
+                return TRACED
+            if name.startswith("numpy."):
+                return STATIC
+            if name in ("min", "max", "sum", "abs", "sorted", "tuple",
+                        "list", "dict", "set", "zip", "enumerate", "map"):
+                return TV(arg_max)
+            if name == "range":
+                return STATIC
+        # calling the result of another call (jax.vmap(f)(xs), jitted fns)
+        if isinstance(fn, ast.Call):
+            inner = self._eval(fn, env)
+            return TRACED if inner.taint == Taint.TRACED else UNKNOWN
+
+        bare = fn.id if isinstance(fn, ast.Name) else (
+            fn.attr if isinstance(fn, ast.Attribute) else None)
+        if bare in self.hot_calls:
+            return TRACED
+        if isinstance(fn, ast.Attribute):
+            base = self._eval(fn.value, env)
+            if bare in ("item", "tolist"):
+                return STATIC
+            if base.cls is not None:
+                rets = self.reg.method_return(base.cls, bare)
+                if rets:
+                    tvs = [classify_annotation(a, self.reg) for a in rets]
+                    out = tvs[0]
+                    for t in tvs[1:]:
+                        out = _merge(out, t)
+                    return out
+                return UNKNOWN
+            return TV(base.taint)
+        if isinstance(fn, ast.Name):
+            if self.reg.has(fn.id):
+                return TV(Taint.STATIC, cls=fn.id)      # constructor
+            target = self.index.resolve_name(self.mod, fn.id)
+            if target is not None and \
+                    not isinstance(target.node, ast.Lambda) and \
+                    target.node.returns is not None:
+                return classify_annotation(
+                    ast.unparse(target.node.returns), self.reg)
+        return UNKNOWN
