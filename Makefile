@@ -85,13 +85,27 @@ bench-smoke:
 	hit=max((r['cache_hit_rate'] for r in con), default=0.0); \
 	whit=max((r.get('cache_hit_rate_warm', 0.0) for r in con), default=0.0); \
 	sav=max((r['bytes_saved_cache'] for r in con), default=0.0); \
+	cw=[r for r in rows if r.get('compile_us_cold', 0) > 0]; \
+	assert cw, 'no rows with cold compile time (executable store unused)'; \
+	bad_cw=[(r['dataset'], r['query'], r['system'], r.get('wire'), \
+	         r['compile_us_warm'], r['compile_us_cold'], \
+	         r.get('compiles_warm')) for r in cw \
+	        if r['compile_us_warm'] > 0.05 * r['compile_us_cold'] \
+	        or r.get('compiles_warm', 0) > 0]; \
+	assert not bad_cw, \
+	'warm path re-jits (persistent executable store broken): %r' % bad_cw; \
+	assert t['async_leq_sync'], \
+	'async pipeline slower than sync: %r' % t; \
+	wcold=max(r['compile_us_cold'] for r in cw); \
+	wwarm=max(r['compile_us_warm'] for r in cw); \
 	wv=vws[0]; \
 	wcut=1.0 - (wv['bytes_wire_fetch'] + wv['bytes_wire_verify']) \
 	     / max(wv['bytes_fetch'] + wv['bytes_verify'], 1.0); \
 	print('bench-smoke: %d result rows, storage+cache+wire counts agree; ' \
 	'adj bytes dense %d vs bucketed %d; cache hit-rate %.3f (warm %.3f) ' \
 	'bytes_saved_cache %.0f; varint wire cut %.1f%%; ' \
+	'compile cold max %.0fus warm max %.0fus (zero warm re-jits); ' \
 	'sync %.0fus async %.0fus (async<=sync: %s)' \
 	% (len(d['results']), adj.get('dense', -1), adj.get('bucketed', -1), \
-	hit, whit, sav, 100 * wcut, \
+	hit, whit, sav, 100 * wcut, wcold, wwarm, \
 	t['sync_us'], t['async_us'], t['async_leq_sync']))"

@@ -9,7 +9,15 @@ JAX moves fast and this repo has to run on whatever the container ships:
 * ``Compiled.cost_analysis()`` returned a one-element *list* of dicts on
   0.4.x and a plain dict later;
 * the ``jax.tree`` namespace (``jax.tree.map`` & co) replaced the older
-  ``jax.tree_util`` spellings.
+  ``jax.tree_util`` spellings;
+* compiled-executable persistence moved around: 0.4.x ships
+  ``jax.experimental.serialize_executable`` (pickles the underlying XLA
+  executable — true zero-recompile loads) while ``jax.export`` (also
+  present on 0.4.37) round-trips StableHLO that still needs an XLA compile
+  on load.  The AOT stage-executable cache
+  (:mod:`repro.runtime.compile_cache`) needs the former; both probes
+  degrade to ``None``/``False`` so the cache silently disables itself on
+  JAX builds without executable serialization.
 
 Every call-site in this repo imports the resolved symbol from here, so a
 JAX upgrade touches exactly this file.  Probes run once at import time and
@@ -28,7 +36,8 @@ __all__ = [
     "AxisType", "HAS_AXIS_TYPES", "default_axis_types", "make_mesh",
     "shard_map", "tree_map", "tree_leaves", "tree_reduce",
     "tree_map_with_path", "with_sharding_constraint", "cost_analysis",
-    "memory_analysis",
+    "memory_analysis", "HAS_EXECUTABLE_SERIALIZATION", "serialize_compiled",
+    "deserialize_compiled", "version_stamp",
 ]
 
 
@@ -146,3 +155,50 @@ def memory_analysis(compiled):
         return compiled.memory_analysis()
     except Exception:
         return None
+
+
+# --------------------------------------------------------------------------- #
+# Compiled-executable persistence (the AOT stage-executable cache)
+# --------------------------------------------------------------------------- #
+try:
+    from jax.experimental.serialize_executable import (  # type: ignore
+        deserialize_and_load as _deserialize_and_load, serialize as
+        _serialize_executable)
+    HAS_EXECUTABLE_SERIALIZATION = True
+except ImportError:                                          # pragma: no cover
+    _serialize_executable = _deserialize_and_load = None
+    HAS_EXECUTABLE_SERIALIZATION = False
+
+
+def serialize_compiled(compiled):
+    """``jax.stages.Compiled`` -> picklable ``(payload, in_tree, out_tree)``.
+
+    The triple is exactly what :func:`deserialize_compiled` needs; the
+    PyTreeDefs pickle as long as every custom node type (``WaveState``,
+    ``DeviceGraph``, ``AdjCache``) is import-registered at load time, which
+    module import guarantees.  Raises on unsupported JAX builds — callers
+    should gate on :data:`HAS_EXECUTABLE_SERIALIZATION`.
+    """
+    if _serialize_executable is None:                        # pragma: no cover
+        raise RuntimeError("this JAX build cannot serialize executables")
+    return _serialize_executable(compiled)
+
+
+def deserialize_compiled(triple):
+    """Inverse of :func:`serialize_compiled`: returns a loaded executable
+    callable with the original (pytree) calling convention — no tracing,
+    no XLA compilation."""
+    if _deserialize_and_load is None:                        # pragma: no cover
+        raise RuntimeError("this JAX build cannot deserialize executables")
+    payload, in_tree, out_tree = triple
+    return _deserialize_and_load(payload, in_tree, out_tree)
+
+
+def version_stamp() -> str:
+    """Environment fingerprint every persisted executable is keyed under:
+    a pickled executable is only valid on the exact jax/jaxlib pair and
+    backend that produced it."""
+    import jaxlib
+
+    return (f"jax={jax.__version__};jaxlib={jaxlib.__version__};"
+            f"backend={jax.default_backend()};ndev={jax.device_count()}")

@@ -6,6 +6,7 @@ DESIGN.md §5) plus the q1..q8 / qc1..qc4 query sets.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 
 
@@ -34,7 +35,11 @@ class EngineConfig:
     wire_format: str = "raw"           # 'raw' (int32 slabs, the reference) |
                                        # 'varint' (delta+varint / Elias-Fano
                                        # coded u8 streams on the wire; results
-                                       # are wire-format-invariant)
+                                       # are wire-format-invariant) |
+                                       # 'auto' (measured per-run selection
+                                       # from persisted wire trials — see
+                                       # core/wire.py resolve_wire_format;
+                                       # requires priors_path to learn)
     plan_rho: float = 1.0              # score-function exponent (paper uses 1)
     seed: int = 0
     # --- on-device adjacency storage (graph/storage.py DeviceGraph) --------- #
@@ -48,6 +53,14 @@ class EngineConfig:
     # --- cross-run priors (core/priors.py) ---------------------------------- #
     priors_path: str = ""              # JSON cache of per-(pattern, graph)
                                        # capacity/cost priors ("" = disabled)
+    # --- persistent stage-executable cache (runtime/compile_cache.py) ------- #
+    compile_cache_dir: str = ""        # per-host on-disk store of serialized
+                                       # stage executables ("" = disabled);
+                                       # with priors v2 a warm run performs
+                                       # zero traces/compiles
+    prewarm: bool = True               # resolve the stage ladder on a
+                                       # background thread during group
+                                       # formation (off the critical path)
     # --- accelerator kernels ------------------------------------------------ #
     use_pallas_kernels: bool = False   # Pallas membership in back-edge checks +
                                        # intersect in bucketed candidate gen
@@ -75,10 +88,24 @@ class EngineConfig:
             raise ValueError(
                 f"cache_decay must be >= 0 (0 disables the benefit decay "
                 f"schedule), got {self.cache_decay}")
-        if self.wire_format not in ("raw", "varint"):
+        if self.wire_format not in ("raw", "varint", "auto"):
             raise ValueError(
-                f"wire_format must be 'raw' or 'varint', "
+                f"wire_format must be 'raw', 'varint' or 'auto', "
                 f"got {self.wire_format!r}")
+        if not isinstance(self.compile_cache_dir, str):
+            raise ValueError(
+                f"compile_cache_dir must be a directory path string "
+                f"('' disables the executable store), "
+                f"got {self.compile_cache_dir!r}")
+        if self.compile_cache_dir and os.path.exists(self.compile_cache_dir) \
+                and not os.path.isdir(self.compile_cache_dir):
+            raise ValueError(
+                f"compile_cache_dir exists but is not a directory: "
+                f"{self.compile_cache_dir!r}")
+        if not isinstance(self.prewarm, bool):
+            raise ValueError(
+                f"prewarm must be a bool (background stage pre-warm), "
+                f"got {self.prewarm!r}")
 
 
 # dataset stand-ins: name -> generator kwargs (see graph/generators.py)

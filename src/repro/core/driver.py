@@ -38,6 +38,7 @@ from repro.core.priors import (HIST_BINS, hist_percentile, hist_update,
 from repro.core.query import Pattern
 from repro.core.region import iter_region_groups
 from repro.core.scheduler import GroupQueue, PipelineScheduler, StageRunner
+from repro.core.wire import resolve_wire_format
 from repro.graph.storage import PartitionedGraph, device_graph
 
 
@@ -84,6 +85,12 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
     # ---- capacity / cost priors (persisted §6 calibration) ---------------- #
     pkey = priors_key(pattern, pg) if cfg.priors_path else None
     prior = load_priors(cfg.priors_path).get(pkey) if pkey else None
+    # measured wire auto-selection resolves BEFORE the runner key is built,
+    # so warm runs land on the executables persisted for the chosen codec
+    requested_wire = cfg.wire_format
+    wire_fmt, wire_reason = resolve_wire_format(requested_wire, mode, prior)
+    if wire_fmt != cfg.wire_format:
+        cfg = dataclasses.replace(cfg, wire_format=wire_fmt)
     if prior:
         caps = prior.get("caps", {})
         cfg = dataclasses.replace(
@@ -115,6 +122,11 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
                              cache=adj_cache)
         if ck is not None:
             runner_cache[ck] = (pg, explicit_plan, runner)
+    # compile accounting is reported as THIS call's delta (runner_cache
+    # reuses runners across calls, so the counters are cumulative)
+    compiles0, compile_s0 = runner.compiles, runner.compile_s
+    exec_stats0 = (dict(runner.exec_cache.stats)
+                   if runner.exec_cache is not None else None)
 
     # ---- candidate seeds per device: deg(v) >= deg(u_start) --------------- #
     ndev, stride = pg.ndev, pg.stride
@@ -136,8 +148,13 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
                  bytes_fetch=0.0, bytes_verify=0.0, n_groups=0,
                  bytes_wire_fetch=0.0, bytes_wire_verify=0.0,
                  wire_format=cfg.wire_format,
+                 wire_format_requested=requested_wire,
+                 wire_auto_reason=wire_reason,
                  bytes_fetch_compressed=0.0, bytes_saved_cache=0.0,
                  cache_hits=0.0, cache_probes=0.0,
+                 compile_cache_hits=0.0, compiles=0, compile_s=0.0,
+                 exec_cache_enabled=bool(runner.exec_cache is not None
+                                         and runner.exec_cache.enabled),
                  cache_enabled=bool(runner.cache is not None),
                  cache_bytes=int(runner.cache.cache_bytes)
                  if runner.cache is not None else 0,
@@ -166,6 +183,7 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
         stats["bytes_saved_cache"] += float(st["bytes_saved_cache"])
         stats["cache_hits"] += float(st["cache_hits"])
         stats["cache_probes"] += float(st["cache_probes"])
+        stats["compile_cache_hits"] += float(st["compile_cache_hits"])
         hist_update(node_hist, st["seed_node_counts"])
         if return_embeddings:
             embs.update(extract_embeddings(np.asarray(rows),
@@ -188,6 +206,11 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
     max_sme = max((len(s) for s in sme_seeds), default=0)
     if max_sme > 0:
         scap = 1 << (min(max_sme, 4096) - 1).bit_length()
+        if cfg.prewarm:
+            # resolve the SM-E ladder on a background thread while the
+            # queue setup below runs (compile — or store deserialization —
+            # off the critical path)
+            runner.prewarm_async(scap, local_only=True)
         queues = [[np.asarray(s, dtype=np.int64)] if len(s) else []
                   for s in sme_seeds]
         c = sched.run(queues, scap, local_only=True, phase="sme",
@@ -226,11 +249,26 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
         max_g = int(float(cfg.region_group_budget) // size_cost)
         max_g = max(1, min(max_g + 1, max(len(s) for s in dist_seeds)))
         scap = 1 << (max_g - 1).bit_length()
+        if cfg.prewarm:
+            # distributed-phase ladder warms while Algorithm-3 lazy group
+            # formation runs inside the scheduler
+            runner.prewarm_async(scap, local_only=False)
         c = sched.run(queues, scap, local_only=False, phase="dist",
                       auto_start=auto_start)
         if c is not None:
             per_seed_cost = max(c, 1.0)
         stats["n_groups"] = max(q.n_formed for q in queues)
+
+    # settle background pre-warm before reading the compile counters, then
+    # drain store hits banked by prewarm-only resolutions (waves that ran
+    # already consumed theirs through finalize_wave's exec_hits argument)
+    runner.join_prewarm()
+    stats["compile_cache_hits"] += runner.take_hits()
+    stats["compiles"] = runner.compiles - compiles0
+    stats["compile_s"] = runner.compile_s - compile_s0
+    if exec_stats0 is not None:
+        stats["exec_cache"] = {k: runner.exec_cache.stats[k] - exec_stats0[k]
+                               for k in exec_stats0}
 
     stats["final_caps"] = dict(frontier=runner.cfg.frontier_cap,
                                fetch=runner.cfg.fetch_cap,
@@ -246,6 +284,19 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
             entry["pipeline_depth"] = int(stats["auto_depth"])
         elif prior_depth:                 # keep the learned depth alive
             entry["pipeline_depth"] = int(prior_depth)
+        # wire trials feed resolve_wire_format's measured selection: record
+        # compute time net of compilation (prewarm hides most of it, but a
+        # cold raw run must not look slower than a warm varint run)
+        trials = dict(prior.get("wire_trials", {})) if prior else {}
+        trials[f"{mode}:{cfg.wire_format}"] = dict(
+            pipeline_s=max(stats["wave_s_total"] - stats["compile_s"], 0.0),
+            wire_bytes=stats["bytes_wire_fetch"] + stats["bytes_wire_verify"])
+        entry["wire_trials"] = trials
+        choice = dict(prior.get("wire_choice", {})) if prior else {}
+        if requested_wire == "auto":
+            choice[mode] = cfg.wire_format   # hysteresis anchor for next run
+        if choice:
+            entry["wire_choice"] = choice
         save_priors(cfg.priors_path, pkey, entry)
     return EnumerationResult(count=total,
                              embeddings=embs if return_embeddings else None,

@@ -567,6 +567,10 @@ class WaveState:
     bytes_saved_cache: jnp.ndarray       # () f32 — fetchV bytes hit-masked
     cache_hits: jnp.ndarray      # () f32 — unique foreign ids served by cache
     cache_probes: jnp.ndarray    # () f32 — unique foreign ids requested
+    compile_cache_hits: jnp.ndarray  # () f32 — stage executables loaded, not
+    # traced, for this wave's dispatches (StageRunner credits via the
+    # finalize exec_hits argument; the field itself stays zero inside the
+    # stages — host-side compile accounting never enters a trace)
     node_counts: jnp.ndarray     # (ndev, scap) trie nodes per seed (§6 calib)
     rounds_alive: tuple = ()     # per-unit (ndev,) alive counts
     pend_a: jnp.ndarray | None = None   # (ndev, cap, K) EVI endpoint a
@@ -579,6 +583,7 @@ class WaveState:
                  self.bytes_wire_fetch, self.bytes_wire_verify,
                  self.bytes_fetch_compressed, self.bytes_saved_cache,
                  self.cache_hits, self.cache_probes,
+                 self.compile_cache_hits,
                  self.node_counts, self.rounds_alive,
                  self.pend_a, self.pend_b, self.pend_m), None)
 
@@ -607,6 +612,7 @@ def init_wave(g: DeviceGraph, seeds, seed_mask) -> WaveState:
         bytes_saved_cache=jnp.zeros((), jnp.float32),
         cache_hits=jnp.zeros((), jnp.float32),
         cache_probes=jnp.zeros((), jnp.float32),
+        compile_cache_hits=jnp.zeros((), jnp.float32),
         node_counts=jnp.zeros((ndev, scap), jnp.int32))
 
 
@@ -706,9 +712,15 @@ def verify_stage(g: DeviceGraph, pd: PlanData, cfg: EngineConfig,
                    pend_a=None, pend_b=None, pend_m=None)
 
 
-def finalize_wave(state: WaveState):
+def finalize_wave(state: WaveState, exec_hits=0.0):
     """Drain point: WaveState -> the classic (rows, alive, counts, complete,
-    stats) tuple the driver consumes."""
+    stats) tuple the driver consumes.
+
+    ``exec_hits`` is the StageRunner's count of stage dispatches this wave
+    served from the persistent executable cache instead of tracing
+    (:mod:`repro.runtime.compile_cache`).  It rides through the traced
+    finalize as a scalar argument so the hit accounting reaches the driver
+    in the same single ``device_get`` as every other wave stat."""
     counts = state.alive.sum(axis=-1)
     stats = dict(bytes_fetch=state.bytes_fetch,
                  bytes_verify=state.bytes_verify,
@@ -718,6 +730,7 @@ def finalize_wave(state: WaveState):
                  bytes_saved_cache=state.bytes_saved_cache,
                  cache_hits=state.cache_hits,
                  cache_probes=state.cache_probes,
+                 compile_cache_hits=state.compile_cache_hits + exec_hits,
                  rows_per_round=jnp.stack(state.rounds_alive),
                  node_counts=state.node_counts)
     return (state.rows, state.alive, counts,

@@ -6,11 +6,12 @@ over an immutable :class:`~repro.core.engine.WaveState`:
     fetch_stage  -> expand_stage -> verify_stage        (one unit)
 
 This module pipelines those stages across *region-group waves*.  JAX's
-async dispatch means a jitted stage call returns immediately with futures;
-the scheduler therefore keeps up to ``EngineConfig.pipeline_depth`` waves
-in flight and interleaves their stage dispatches oldest-first, blocking
-(the only ``jax.block_until_ready``-style sync point) solely when the
-oldest wave is retired.  With ``pipeline_depth=2`` (double buffering) the timeline is::
+async dispatch means a compiled stage call returns immediately with
+futures; the scheduler therefore keeps up to ``EngineConfig.pipeline_depth``
+waves in flight, dispatches each wave's stages **contiguously** (stages +
+a jitted ``finalize_wave`` back-to-back on the device stream), and blocks
+(the only sync point) solely on the single ``device_get`` that retires the
+oldest wave.  With ``pipeline_depth=2`` (double buffering) the timeline is::
 
     wave k   : fetchV[u0] expand[u0] verifyE[u0] fetchV[u1] ...  ──┐ retire k
     wave k+1 :     fetchV[u0]  expand[u0]  verifyE[u0]     ...  ───┼────┐
@@ -28,8 +29,16 @@ driver's ``run_batches``:
 * **overflow split** (§6 memory control): an incomplete wave is halved and
   both halves re-queued (LIFO, so sub-waves finish before new groups start);
 * **capacity escalation**: a single-seed wave that still overflows doubles
-  the engine capacities and re-jits the stages (elastic capacities —
-  enumeration never silently drops results);
+  the engine capacities and re-resolves the stages (elastic capacities —
+  enumeration never silently drops results; against a warm executable
+  store the re-resolve is deserialization, not recompilation);
+* **AOT stage resolution + persistent executable cache**: stages are
+  compiled explicitly (``.lower().compile()``) through a two-level cache —
+  in-process slots, then the on-disk
+  :class:`~repro.runtime.compile_cache.StageExecCache` — with a background
+  pre-warm of the whole ladder, so a warm server performs **zero**
+  traces/compiles (``stats["compiles"] == 0``) and cold compiles move off
+  the critical path;
 * **steal-from-longest** (the paper's checkR/shareR): when a device's group
   queue drains before its peers', the next wave refills its slot from the
   tail of the longest surviving queue;
@@ -46,11 +55,14 @@ driver's ``run_batches``:
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.rads import EngineConfig
@@ -60,6 +72,8 @@ from repro.core.engine import (PlanData, WaveState, expand_stage,
                                verify_stage)
 from repro.core.exchange import ExchangeBackend
 from repro.graph.storage import DeviceGraph
+from repro.runtime.compile_cache import (arg_signature, build_exec_cache,
+                                         stage_context)
 
 _MAX_CAP = 1 << 22
 _AUTO_START_DEPTH = 2       # pipeline_depth="auto" begins double-buffered
@@ -133,89 +147,297 @@ class GroupQueue:
 # --------------------------------------------------------------------------- #
 class StageRunner:
     """Holds the on-device graph (any registered ``DeviceGraph`` format)
-    plus a lazily-built cache of jitted stage functions keyed by
-    ``(stage, unit, local_only)``; capacity escalation doubles the engine
-    caps and clears the jit cache (re-jit).  The graph travels through the
-    jitted stages as a pytree argument, so sharded (spmd) and device-local
-    formats use the same code path.
+    plus a two-level cache of **AOT-compiled** stage executables:
+
+    1. an in-process slot table keyed ``(stage key, argument signature)``
+       — the classic jit cache, now holding ``jax.stages.Compiled``
+       objects resolved via ``jax.jit(...).lower(*args).compile()``;
+    2. the optional persistent per-host store
+       (:class:`~repro.runtime.compile_cache.StageExecCache`, enabled by
+       ``EngineConfig.compile_cache_dir``) consulted on every slot miss
+       *before* tracing — a populated store makes a whole run compile-free.
+
+    Because stages are compiled explicitly, the runner knows exactly when
+    XLA work happened: ``compiles``/``compile_s`` count actual stage
+    compilations (a warm run must end with ``compiles == 0``) and
+    ``take_hits()`` drains the number of resolutions served from the
+    persistent store; the scheduler threads that count into the wave's
+    jitted ``finalize_wave`` as ``exec_hits`` so it reaches the driver
+    stats through the normal single retire ``device_get``.
+
+    ``prewarm``/``prewarm_async`` resolve the full stage ladder for a seed
+    capacity from *abstract* ``jax.eval_shape`` values — a background
+    pre-warm moves compilation (or store deserialization) off the critical
+    path while host-side group formation runs.  Resolution is thread-safe:
+    concurrent resolvers of one slot rendezvous on an event instead of
+    compiling twice, and ``escalate`` bumps a generation counter so a
+    stale pre-warm resolution is never installed over the new capacities.
+
+    Capacity escalation doubles the engine caps and clears the slot table
+    (re-resolve — against a warm store that is deserialization, not
+    recompilation).  The graph travels through the compiled stages as a
+    pytree argument, so sharded (spmd) and device-local formats use the
+    same code path.
 
     The runner also *owns* the foreign-adjacency cache state
     (:class:`~repro.core.cache.AdjCache`): every dispatched ``fetch_stage``
     consumes ``self.cache`` and replaces it with the post-admission state
     (futures — JAX async keeps the host loop non-blocking), sequencing the
     cache through fetches in dispatch order across waves *and* across the
-    capacity-escalation re-jits (cache geometry is independent of the
-    engine capacities, so escalation re-traces the stages around the same
-    cache arrays).  Pass ``cache=`` explicitly to share or shard a
+    capacity-escalation re-resolves (cache geometry is independent of the
+    engine capacities).  Pass ``cache=`` explicitly to share or shard a
     prebuilt cache (the spmd driver does); the default builds one from
-    ``cfg`` (``None`` when disabled)."""
+    ``cfg`` (``None`` when disabled).  ``exec_cache`` follows the same
+    convention: ``"auto"`` builds the store from ``cfg.compile_cache_dir``,
+    an explicit instance shares one store across runners (the benchmark
+    sweep does), ``None`` disables persistence."""
 
     def __init__(self, g: DeviceGraph, pd: PlanData,
                  cfg: EngineConfig, exch: ExchangeBackend,
-                 cache: AdjCache | None | str = "auto"):
+                 cache: AdjCache | None | str = "auto",
+                 exec_cache="auto"):
         self.g = g
         self.pd, self.exch = pd, exch
         self.cfg = cfg
         self.cache = build_cache(cfg, g) if cache == "auto" else cache
-        self._fns: dict = {}
+        self.exec_cache = (build_exec_cache(cfg) if exec_cache == "auto"
+                           else exec_cache)
+        if exch.mode == "spmd":
+            # a Compiled executable bakes its input *shardings*, which the
+            # store key (treedef + shape/dtype signature) does not capture
+            # and the abstract pre-warm path cannot reproduce — spmd
+            # resolves concretely (shardings taken from the live args) and
+            # in-process only; see prewarm()
+            self.exec_cache = None
+        self.compiles = 0        # stage executables actually XLA-compiled
+        self.compile_s = 0.0     # wall seconds spent lowering + compiling
+        self._slots: dict = {}   # (key, sig) -> Compiled | pending Event
+        self._lock = threading.Lock()
+        self._gen = 0            # bumped by escalate(): invalidates in-flight
+                                 # pre-warm resolutions of the old capacities
+        self._hits_pending = 0.0  # store hits awaiting wave attribution
+        self._plan_repr = repr(pd)
+        self._prewarm_threads: list[threading.Thread] = []
 
     @property
     def n_units(self) -> int:
         return len(self.pd.unit_steps)
 
     def escalate(self) -> bool:
-        """Double every engine capacity (up to the ceiling) and re-jit.
+        """Double every engine capacity (up to the ceiling) and re-resolve.
 
         The wire-codec stream capacities (:mod:`repro.core.wire`) are
         derived from ``fetch_cap``/``verify_cap`` inside the stages, so
-        they escalate — and re-jit — alongside the engine caps; the cache
-        geometry alone stays fixed."""
+        they escalate — and re-resolve — alongside the engine caps; the
+        cache geometry alone stays fixed."""
         c = self.cfg
         if c.frontier_cap >= _MAX_CAP:
             return False
-        self.cfg = dataclasses.replace(
-            c, frontier_cap=min(c.frontier_cap * 2, _MAX_CAP),
-            fetch_cap=min(c.fetch_cap * 2, _MAX_CAP),
-            verify_cap=min(c.verify_cap * 2, _MAX_CAP))
-        self._fns.clear()
+        with self._lock:
+            self.cfg = dataclasses.replace(
+                c, frontier_cap=min(c.frontier_cap * 2, _MAX_CAP),
+                fetch_cap=min(c.fetch_cap * 2, _MAX_CAP),
+                verify_cap=min(c.verify_cap * 2, _MAX_CAP))
+            self._slots.clear()
+            self._gen += 1
         return True
 
-    def _get(self, key, make):
-        fn = self._fns.get(key)
-        if fn is None:
-            fn = self._fns[key] = make()
-        return fn
+    # -- persistent-store hit accounting ------------------------------------ #
+    def take_hits(self) -> float:
+        """Drain the pending persistent-store hit count; the scheduler
+        attributes it to the wave whose finalize is being dispatched."""
+        with self._lock:
+            h, self._hits_pending = self._hits_pending, 0.0
+        return h
 
+    def credit_hits(self, h: float) -> None:
+        """Re-credit hits whose wave was discarded (overflow split /
+        escalation) so the run total stays exact."""
+        with self._lock:
+            self._hits_pending += float(h)
+
+    # -- stage resolution ---------------------------------------------------- #
+    def _resolve(self, key, make, args):
+        """The stage executable for ``(key, signature(args))``: in-process
+        slot, else persistent store, else AOT trace + compile (counted).
+
+        A second thread resolving an in-flight slot waits on the first
+        instead of compiling twice; a resolution that straddles an
+        ``escalate`` is handed to its caller but never installed."""
+        sig = arg_signature(args)
+        skey = (key, sig)
+        while True:
+            with self._lock:
+                gen = self._gen
+                entry = self._slots.get(skey)
+                if entry is None:
+                    ev = threading.Event()
+                    self._slots[skey] = ev
+                    break
+                if not isinstance(entry, threading.Event):
+                    return entry
+            entry.wait()
+        fn = None
+        try:
+            ctx = digest = None
+            if self.exec_cache is not None:
+                ctx = stage_context(key, self.cfg, self.exch.mode,
+                                    self._plan_repr)
+                digest = self.exec_cache.digest(key, sig, ctx)
+                fn = self.exec_cache.load(digest, sig, ctx)
+                if fn is not None:
+                    with self._lock:
+                        self._hits_pending += 1.0
+            if fn is None:
+                t0 = time.perf_counter()
+                fn = make().lower(*args).compile()
+                dt = time.perf_counter() - t0
+                with self._lock:
+                    self.compiles += 1
+                    self.compile_s += dt
+                if self.exec_cache is not None:
+                    self.exec_cache.store(digest, sig, ctx, fn)
+            return fn
+        finally:
+            with self._lock:
+                if fn is not None and self._gen == gen:
+                    self._slots[skey] = fn
+                elif self._slots.get(skey) is ev:
+                    del self._slots[skey]
+            ev.set()
+
+    # the jax.jit(lambda ...) literals below are the stage call sites the
+    # radslint call graph roots on — keep them literal
+    def _make_init(self):
+        return jax.jit(lambda gg, s, m: init_wave(gg, s, m))
+
+    def _make_fetch(self, ui: int):
+        pd, cfg, exch = self.pd, self.cfg, self.exch
+        # cache=None is a valid (empty) pytree argument, so one closure
+        # serves both the cached and the uncached configuration
+        return jax.jit(lambda gg, s, c: fetch_stage(gg, pd, cfg, exch, ui,
+                                                    s, False, c))
+
+    def _make_expand(self, ui: int, local_only: bool):
+        pd, cfg = self.pd, self.cfg
+        return jax.jit(lambda gg, s, b: expand_stage(gg, pd, cfg, ui, s, b,
+                                                     local_only))
+
+    def _make_verify(self, ui: int, local_only: bool):
+        pd, cfg, exch = self.pd, self.cfg, self.exch
+        return jax.jit(lambda gg, s: verify_stage(gg, pd, cfg, exch, ui, s,
+                                                  local_only))
+
+    def _make_finalize(self):
+        return jax.jit(lambda s, h: finalize_wave(s, h))
+
+    # -- stage dispatch ------------------------------------------------------ #
     def init(self, seeds: np.ndarray, mask: np.ndarray) -> WaveState:
-        fn = self._get("init", lambda: jax.jit(
-            lambda gg, s, m: init_wave(gg, s, m)))
-        return fn(self.g, seeds, mask)
+        args = (self.g, seeds, mask)
+        return self._resolve("init", self._make_init, args)(*args)
 
     def fetch(self, ui: int, state: WaveState, local_only: bool):
         if local_only:                       # SM-E: no collectives at all
             return state, None
-        pd, cfg, exch = self.pd, self.cfg, self.exch
-        # cache=None is a valid (empty) pytree argument, so one closure
-        # serves both the cached and the uncached configuration
-        fn = self._get(("fetch", ui), lambda: jax.jit(
-            lambda gg, s, c: fetch_stage(gg, pd, cfg, exch, ui, s,
-                                         False, c)))
-        state, bufs, self.cache = fn(self.g, state, self.cache)
+        args = (self.g, state, self.cache)
+        fn = self._resolve(("fetch", ui), lambda: self._make_fetch(ui), args)
+        state, bufs, self.cache = fn(*args)
         return state, bufs
 
     def expand(self, ui: int, state: WaveState, bufs, local_only: bool):
-        pd, cfg = self.pd, self.cfg
-        fn = self._get(("expand", ui, local_only), lambda: jax.jit(
-            lambda gg, s, b: expand_stage(gg, pd, cfg, ui, s, b,
-                                          local_only)))
-        return fn(self.g, state, bufs)
+        args = (self.g, state, bufs)
+        fn = self._resolve(("expand", ui, local_only),
+                           lambda: self._make_expand(ui, local_only), args)
+        return fn(*args)
 
     def verify(self, ui: int, state: WaveState, local_only: bool):
-        pd, cfg, exch = self.pd, self.cfg, self.exch
-        fn = self._get(("verify", ui, local_only), lambda: jax.jit(
-            lambda gg, s: verify_stage(gg, pd, cfg, exch, ui, s,
-                                       local_only)))
-        return fn(self.g, state)
+        args = (self.g, state)
+        fn = self._resolve(("verify", ui, local_only),
+                           lambda: self._make_verify(ui, local_only), args)
+        return fn(*args)
+
+    def finalize(self, state: WaveState, exec_hits: float = 0.0):
+        """Dispatch the jitted drain stage (``finalize_wave``) — the wave's
+        classic result tuple as device futures, with the runner's
+        persistent-store hit count riding along as a traced scalar."""
+        args = (state, np.float32(exec_hits))
+        fn = self._resolve("finalize", self._make_finalize, args)
+        return fn(*args)
+
+    # -- pre-warm ------------------------------------------------------------ #
+    def prewarm(self, scap: int, local_only: bool) -> int:
+        """Resolve the whole stage ladder for seed capacity ``scap`` from
+        abstract values (``jax.eval_shape`` chains the inter-stage shapes;
+        no device work happens beyond compilation itself).  Abstract and
+        concrete dispatches share argument signatures, so a later real
+        wave lands exactly on the slots resolved here.  Returns the number
+        of stages resolved — 0 when aborted by a concurrent escalation
+        (the ladder being warmed no longer matches the live capacities)
+        or under the spmd backend (ShapeDtypeStruct placeholders carry no
+        mesh sharding, and a Compiled stage rejects calls whose input
+        shardings differ from the ones it was lowered with — spmd stages
+        must be resolved from the live sharded arrays)."""
+        if self.exch.mode == "spmd":
+            return 0
+        g, pd, cfg, exch = self.g, self.pd, self.cfg, self.exch
+        gen = self._gen
+        seeds = jax.ShapeDtypeStruct((g.ndev, scap), jnp.int32)
+        mask = jax.ShapeDtypeStruct((g.ndev, scap), jnp.bool_)
+        args = (g, seeds, mask)
+        self._resolve("init", self._make_init, args)
+        state = jax.eval_shape(lambda gg, s, m: init_wave(gg, s, m), *args)
+        n = 1
+        for ui in range(self.n_units):
+            if self._gen != gen:
+                return 0
+            bufs = None
+            if not local_only:
+                args = (g, state, self.cache)
+                self._resolve(("fetch", ui),
+                              lambda: self._make_fetch(ui), args)
+                state, bufs, _ = jax.eval_shape(
+                    lambda gg, s, c: fetch_stage(gg, pd, cfg, exch, ui, s,
+                                                 False, c), *args)
+                n += 1
+            args = (g, state, bufs)
+            self._resolve(("expand", ui, local_only),
+                          lambda: self._make_expand(ui, local_only), args)
+            state = jax.eval_shape(
+                lambda gg, s, b: expand_stage(gg, pd, cfg, ui, s, b,
+                                              local_only), *args)
+            args = (g, state)
+            self._resolve(("verify", ui, local_only),
+                          lambda: self._make_verify(ui, local_only), args)
+            state = jax.eval_shape(
+                lambda gg, s: verify_stage(gg, pd, cfg, exch, ui, s,
+                                           local_only), *args)
+            n += 2
+        args = (state, np.float32(0.0))
+        self._resolve("finalize", self._make_finalize, args)
+        return n + 1
+
+    def prewarm_async(self, scap: int, local_only: bool) -> threading.Thread:
+        """Run :meth:`prewarm` on a daemon thread (the driver launches this
+        right before each scheduler phase, so compilation overlaps group
+        formation).  Join via :meth:`join_prewarm` before reading
+        ``compiles``/``compile_s``.  Pre-warm is advisory: a failure warns
+        and the main path compiles on demand as before."""
+        def work():
+            try:
+                self.prewarm(scap, local_only)
+            except Exception as e:
+                warnings.warn(f"stage pre-warm (scap={scap}, local_only="
+                              f"{local_only}) failed: {e!r}", RuntimeWarning)
+        th = threading.Thread(target=work, name="rads-stage-prewarm",
+                              daemon=True)
+        th.start()
+        self._prewarm_threads.append(th)
+        return th
+
+    def join_prewarm(self) -> None:
+        for th in self._prewarm_threads:
+            th.join()
+        self._prewarm_threads.clear()
 
 
 # --------------------------------------------------------------------------- #
@@ -224,13 +446,16 @@ class StageRunner:
 @dataclass
 class _Wave:
     """One in-flight region-group wave: host-side batches (for the split
-    loop), the device-side state futures, and a stage cursor."""
+    loop), the device-side state futures, a stage cursor, and — once every
+    stage is dispatched — the jitted-finalize result futures (``fin``)
+    whose ``device_get`` is the wave's single retire sync."""
     batches: list[np.ndarray]
     mask: np.ndarray
     state: WaveState
     stages: list[tuple[str, int]]
     pos: int = 0
     bufs: object = None
+    fin: object = None
     t_start: float = field(default_factory=time.perf_counter)
 
 
@@ -300,20 +525,42 @@ class PipelineScheduler:
             w.state = self.runner.verify(ui, w.state, local_only)
         w.pos += 1
 
+    def _drain(self, w: _Wave, local_only: bool):
+        """Dispatch ALL of a wave's remaining stages, then its jitted
+        finalize — contiguously, so the wave's ops sit back-to-back on the
+        (in-order) device stream and the retire ``device_get`` never waits
+        behind a younger wave's stages.  The old one-stage-per-tick
+        interleave plus an *eager* host-side ``finalize_wave`` at retire
+        time was exactly the bench's async<=sync failure: wave ``k``'s
+        finalize ops were enqueued behind wave ``k+1``'s stages, so the
+        blocking read paid for both waves.
+
+        The finalize carries the runner's drained persistent-store hit
+        count: every stage this wave needed was resolved during its own
+        dispatches above, so attribution is exact (pre-warm hits land on
+        whichever wave finalizes next — same run, same totals)."""
+        while w.pos < len(w.stages):
+            self._dispatch(w, local_only)
+        if w.fin is None:
+            w.fin = self.runner.finalize(w.state, self.runner.take_hits())
+
     # -- retire + robustness loop ------------------------------------------- #
     def _retire(self, w: _Wave, retry: list, phase: str
                 ) -> tuple[float, int]:
-        """Drain point: block on the wave's completeness flag; consume on
-        success, split/escalate on overflow.  Returns (node_cost_sum, n)."""
+        """Drain point: block on the wave's finalized result tuple; consume
+        on success, split/escalate on overflow.  Returns (node_cost_sum, n)."""
         # One batched device->host transfer per retired wave — the pipeline's
-        # only blocking sync.  A single device_get replaces the old scattered
-        # reads (bool(complete), np.asarray(node_counts) here, then eight
-        # scalar float() casts inside the driver's consume), each of which
-        # was its own tiny blocking round-trip serializing the async
-        # pipeline behind host latency (the bench's async <= sync signature).
-        rows, alive, counts, complete, st = jax.device_get(
-            finalize_wave(w.state))
+        # only blocking sync.  finalize_wave itself was jitted and dispatched
+        # right behind the wave's last stage (_drain), so this transfers
+        # already-scheduled values instead of eagerly dispatching a tail of
+        # host-side ops behind the whole device queue (the old async<=sync
+        # failure mode); the old scattered reads (bool(complete), eight
+        # scalar float() casts in the driver's consume) stay batched too.
+        rows, alive, counts, complete, st = jax.device_get(w.fin)
         if not complete:
+            # a discarded wave's stats never reach consume — hand its
+            # persistent-store hit credit back so the run total stays exact
+            self.runner.credit_hits(float(st["compile_cache_hits"]))
             if max(len(b) for b in w.batches) <= 1:
                 if not self.runner.escalate():
                     raise RuntimeError("capacity ceiling reached")
@@ -369,49 +616,45 @@ class PipelineScheduler:
         waves_done, wave_s_phase = 0, 0.0
         t0 = time.perf_counter()
         while True:
-            # 1. advance every in-flight wave one stage, oldest first — this
-            #    enqueues fetchV of wave k+1 behind (not after!) verifyE of
-            #    wave k on the device stream, and crucially keeps the device
-            #    fed *before* any slow host-side work below.
-            for w in tuple(inflight):
-                if w.pos < len(w.stages):
-                    self._dispatch(w, local_only)
-            # 2. top up the pipeline with at most ONE wave per tick; its
-            #    first stage dispatches immediately.  Lazy group formation
-            #    (the expensive Algorithm-3 Python loop) therefore overlaps
-            #    the already-dispatched compute of the older waves.
-            if len(inflight) < depth:
+            # 1. fill the pipeline to ``depth``: each admitted wave
+            #    dispatches ALL its stages plus its jitted finalize
+            #    contiguously (see _drain), so the device stream is fed
+            #    deep before the blocking read below.  Lazy Algorithm-3
+            #    group formation for wave k+1 (a slow host-side Python
+            #    loop) therefore overlaps wave k's already-dispatched
+            #    device compute.
+            while len(inflight) < depth:
                 wave = self._next_wave(queues, retry, scap, local_only)
-                if wave is not None:
-                    w = self._admit(wave, scap)
-                    inflight.append(w)
-                    self._dispatch(w, local_only)
-                    self.stats["n_waves"] += 1
-                    self.stats["max_inflight_waves"] = max(
-                        self.stats["max_inflight_waves"], len(inflight))
+                if wave is None:
+                    break
+                w = self._admit(wave, scap)
+                inflight.append(w)
+                self._drain(w, local_only)
+                self.stats["n_waves"] += 1
+                self.stats["max_inflight_waves"] = max(
+                    self.stats["max_inflight_waves"], len(inflight))
             if not inflight:
                 break
-            # 3. retire the oldest wave once fully dispatched
-            if inflight[0].pos >= len(inflight[0].stages):
-                # NOTE: if retiring escalates capacities, a younger in-flight
-                # wave keeps its already-dispatched old-capacity futures but
-                # its *remaining* stages re-jit at the new capacities — a
-                # mixed-capacity wave is still exact (overflow is monotone
-                # and re-checked at its own retire).
-                oldest = inflight.popleft()
-                s, n = self._retire(oldest, retry, phase)
-                cost_sum += s
-                cost_n += n
-                waves_done += 1
-                wave_s_phase += time.perf_counter() - oldest.t_start
-                if auto and waves_done >= 2:
-                    wall = max(time.perf_counter() - t0, 1e-9)
-                    achieved = wave_s_phase / wall   # mean in-flight waves
-                    if achieved >= depth - 0.5 and depth < _MAX_AUTO_DEPTH:
-                        depth += 1
-                    elif achieved < depth - 1.25 and depth > 1:
-                        depth -= 1
-                    self.stats["auto_depth"] = depth
+            # 2. retire the oldest wave — fully dispatched (finalize
+            #    included) at admission, so this is the pure device_get
+            #    sync.  If retiring escalates capacities, every younger
+            #    in-flight wave already dispatched entirely at the old
+            #    capacities; overflow is monotone and re-checked at its
+            #    own retire, so a stale-capacity wave is still exact.
+            oldest = inflight.popleft()
+            s, n = self._retire(oldest, retry, phase)
+            cost_sum += s
+            cost_n += n
+            waves_done += 1
+            wave_s_phase += time.perf_counter() - oldest.t_start
+            if auto and waves_done >= 2:
+                wall = max(time.perf_counter() - t0, 1e-9)
+                achieved = wave_s_phase / wall       # mean in-flight waves
+                if achieved >= depth - 0.5 and depth < _MAX_AUTO_DEPTH:
+                    depth += 1
+                elif achieved < depth - 1.25 and depth > 1:
+                    depth -= 1
+                self.stats["auto_depth"] = depth
         if auto:
             self.stats["auto_depth"] = depth     # persisted via priors v2
         self.stats[f"{phase}_pipeline_s"] = (

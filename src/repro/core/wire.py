@@ -524,3 +524,49 @@ def pack_bools_lanes(bits, count, cap: int):
 def unpack_bools_lanes(stream, count, m_out: int):
     return jax.vmap(jax.vmap(
         lambda s, c: unpack_bools(s, c, m_out)))(stream, count)
+
+
+# --------------------------------------------------------------------------- #
+# Measured wire-format auto-selection (EngineConfig.wire_format="auto")
+# --------------------------------------------------------------------------- #
+def resolve_wire_format(requested: str, mode: str, prior: dict | None = None,
+                        hysteresis: float = 0.05) -> tuple[str, str]:
+    """Resolve ``wire_format="auto"`` to a concrete codec for this run.
+
+    The driver persists one *trial* per ``(exchange mode, format)`` into
+    the priors entry (``wire_trials[f"{mode}:{fmt}"] = {"pipeline_s": ...,
+    "wire_bytes": ...}``, compile time already subtracted) — the measured
+    bytes-vs-wall tradeoff the CPU sim needs to stop paying 3x wall for
+    compression whose bytes are free intra-process.  Resolution:
+
+    * both formats measured -> the lower ``pipeline_s`` wins, with
+      ``hysteresis`` sticking to the previously recorded choice unless the
+      challenger is more than that fraction faster (a stable choice keeps
+      warm runs on already-persisted executables — flapping would re-trace
+      fetch/verify every run);
+    * one format measured -> *explore* the other (deterministic, so two
+      runs complete the table);
+    * nothing measured -> heuristic: real multi-process transports
+      (``spmd``) default to ``varint`` (wire bytes cost real time), the
+      intra-process reference backends to ``raw`` (their bytes are free,
+      codec compute is not).
+
+    Returns ``(format, reason)`` with reason in ``{"explicit", "measured",
+    "explore", "heuristic"}`` — the driver reports it as
+    ``stats["wire_auto_reason"]``."""
+    if requested != "auto":
+        return requested, "explicit"
+    trials = (prior or {}).get("wire_trials", {})
+    t = {f: trials.get(f"{mode}:{f}") for f in ("raw", "varint")}
+    have = [f for f in ("raw", "varint") if t[f]]
+    if len(have) == 2:
+        best = min(("raw", "varint"), key=lambda f: t[f]["pipeline_s"])
+        prev = (prior or {}).get("wire_choice", {}).get(mode)
+        if prev in ("raw", "varint") and best != prev \
+                and t[best]["pipeline_s"] >= (1.0 - hysteresis) \
+                * t[prev]["pipeline_s"]:
+            best = prev
+        return best, "measured"
+    if len(have) == 1:
+        return ("varint" if have[0] == "raw" else "raw"), "explore"
+    return ("varint" if mode == "spmd" else "raw"), "heuristic"

@@ -31,10 +31,21 @@ def main():
     ap.add_argument("--pallas", action="store_true",
                     help="Pallas kernels: membership in back-edge checks, "
                          "intersect in bucketed candidate generation")
-    ap.add_argument("--wire", default="raw", choices=["raw", "varint"],
-                    help="exchange wire format: raw int32 slabs or "
-                         "delta+varint / Elias-Fano coded u8 streams "
-                         "(core/wire.py; results are identical)")
+    ap.add_argument("--wire", default="raw",
+                    choices=["raw", "varint", "auto"],
+                    help="exchange wire format: raw int32 slabs, "
+                         "delta+varint / Elias-Fano coded u8 streams, or "
+                         "measured per-run auto-selection from persisted "
+                         "wire trials (needs --priors; core/wire.py; "
+                         "results are identical)")
+    ap.add_argument("--compile-cache", default="",
+                    help="per-host directory for the persistent stage-"
+                         "executable store (runtime/compile_cache.py); "
+                         "warm runs deserialize executables instead of "
+                         "tracing ('' = disabled)")
+    ap.add_argument("--no-prewarm", action="store_true",
+                    help="disable background stage pre-warm (resolve the "
+                         "jit ladder off the critical path)")
     ap.add_argument("--cache-decay", type=int, default=None,
                     help="halve cache benefit counters every N update "
                          "batches (0 = never; default "
@@ -82,7 +93,9 @@ def main():
                                            if args.cache_decay is not None
                                            else DEFAULT_ENGINE.cache_decay),
                               wire_format=args.wire,
-                              priors_path=args.priors)
+                              priors_path=args.priors,
+                              compile_cache_dir=args.compile_cache,
+                              prewarm=not args.no_prewarm)
     mesh = None
     if args.mode == "spmd":
         from repro.launch.mesh import make_engine_mesh
@@ -100,7 +113,18 @@ def main():
     print(f"[enum] storage {st['storage_format']}: "
           f"adj {st['peak_adj_bytes'] / 1e6:.2f}MB on device | "
           f"priors preloaded {st['priors_preloaded']}")
-    print(f"[enum] wire {st['wire_format']}: actual fetch "
+    print(f"[enum] compile: {st['compiles']} stage traces "
+          f"({st['compile_s']:.2f}s) | executable store "
+          f"{'on' if st['exec_cache_enabled'] else 'off'}"
+          + (f", {st['exec_cache']['hits']} loads / "
+             f"{st['exec_cache']['stores']} stores"
+             if "exec_cache" in st else "")
+          + f" | prewarm {'on' if cfg.prewarm else 'off'}")
+    print(f"[enum] wire {st['wire_format']}"
+          + (f" (requested {st['wire_format_requested']}, "
+             f"{st['wire_auto_reason']})"
+             if st["wire_format_requested"] == "auto" else "")
+          + ": actual fetch "
           f"{st['bytes_wire_fetch']/1e6:.3f}MB verify "
           f"{st['bytes_wire_verify']/1e6:.3f}MB "
           f"(raw-equivalent {(st['bytes_fetch'] + st['bytes_verify'])/1e6:.3f}MB)")

@@ -1,1 +1,4 @@
+from repro.runtime.compile_cache import (StageExecCache, arg_signature,
+                                         build_exec_cache, code_fingerprint,
+                                         stage_context)
 from repro.runtime.trainer import Trainer, TrainerConfig, FaultInjector

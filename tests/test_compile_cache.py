@@ -1,0 +1,126 @@
+"""Persistent stage-executable cache (runtime/compile_cache.py): a
+serialize -> deserialize roundtrip is byte-identical with a fresh jit, any
+key-layer mismatch forces recompilation (never a wrong-executable hit),
+and corrupt/stale store files degrade to a warning + tracing fallback
+instead of a crash."""
+import dataclasses
+import pickle
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.configs.rads import EngineConfig
+from repro.runtime.compile_cache import (StageExecCache, arg_signature,
+                                         build_exec_cache, stage_context)
+
+pytestmark = pytest.mark.skipif(
+    not compat.HAS_EXECUTABLE_SERIALIZATION,
+    reason="this jax build cannot serialize compiled executables")
+
+
+def _f(x, y):
+    return jnp.dot(x, y) + jnp.float32(1.0)
+
+
+ARGS = (jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        jnp.ones((4, 2), jnp.float32))
+
+
+def _store_one(cache, cfg=None, args=ARGS):
+    cfg = cfg or EngineConfig()
+    sig = arg_signature(args)
+    ctx = stage_context(("fetch", 0), cfg, "sim", "planA")
+    d = cache.digest(("fetch", 0), sig, ctx)
+    compiled = jax.jit(_f).lower(*args).compile()
+    assert cache.store(d, sig, ctx, compiled)
+    return d, sig, ctx, compiled
+
+
+def test_roundtrip_byte_identical(tmp_path):
+    cache = StageExecCache(str(tmp_path))
+    d, sig, ctx, compiled = _store_one(cache)
+    StageExecCache.clear_memory_memo()       # force disk deserialization
+    loaded = cache.load(d, sig, ctx)
+    assert loaded is not None
+    assert cache.stats["hits"] == 1 and cache.stats["errors"] == 0
+    want = np.asarray(jax.jit(_f)(*ARGS))    # fresh-jit reference
+    assert np.asarray(compiled(*ARGS)).tobytes() == want.tobytes()
+    assert np.asarray(loaded(*ARGS)).tobytes() == want.tobytes()
+    # second load comes from the in-process memo, still a hit
+    assert cache.load(d, sig, ctx) is loaded
+    assert cache.stats["hits"] == 2
+
+
+def test_key_mismatch_forces_recompile(tmp_path):
+    cache = StageExecCache(str(tmp_path))
+    cfg = EngineConfig()
+    sig = arg_signature(ARGS)
+
+    def dig(key, c, plan="planA", s=sig):
+        return cache.digest(key, s, stage_context(key, c, "sim", plan))
+
+    base = dig(("fetch", 0), cfg)
+    # capacity tuple, wire format, plan/pattern, and argument shapes each
+    # land on a distinct digest -> a changed run can never hit a stale entry
+    assert dig(("fetch", 0),
+               dataclasses.replace(cfg, fetch_cap=2 * cfg.fetch_cap)) != base
+    assert dig(("fetch", 0),
+               dataclasses.replace(cfg, wire_format="varint")) != base
+    assert dig(("fetch", 0), cfg, plan="planB") != base
+    sig2 = arg_signature((jnp.zeros((6, 4), jnp.float32), ARGS[1]))
+    assert dig(("fetch", 0), cfg, s=sig2) != base
+    # ...but wire-agnostic stages genuinely share: expand's context ignores
+    # wire_format, so raw/varint benchmark cells reuse one expand entry
+    k = ("expand", 0, False)
+    assert dig(k, cfg) == dig(k, dataclasses.replace(cfg,
+                                                     wire_format="varint"))
+    # a digest never stored is a plain miss, not an error
+    ctx = stage_context(("fetch", 0), cfg, "sim", "planA")
+    assert cache.load(base, sig, ctx) is None
+    assert cache.stats == dict(hits=0, misses=1, stores=0, errors=0)
+
+
+def test_corrupt_file_warns_and_falls_back(tmp_path):
+    cache = StageExecCache(str(tmp_path))
+    d, sig, ctx, _ = _store_one(cache)
+    with open(cache._file(d), "wb") as f:
+        f.write(b"not a pickle")
+    StageExecCache.clear_memory_memo()
+    with pytest.warns(RuntimeWarning, match="unusable entry"):
+        assert cache.load(d, sig, ctx) is None
+    assert cache.stats["errors"] == 1
+    assert cache.entries() == []             # the bad file was removed
+
+
+def test_stale_envelope_rejected(tmp_path):
+    """A well-formed pickle from another build (mismatched key material)
+    must be refused at load time, warned about, and dropped."""
+    cache = StageExecCache(str(tmp_path))
+    d, sig, ctx, _ = _store_one(cache)
+    with open(cache._file(d), "rb") as f:
+        env = pickle.load(f)
+    env["material"] = "jax=0.0.0;some-other-build"
+    with open(cache._file(d), "wb") as f:
+        pickle.dump(env, f)
+    StageExecCache.clear_memory_memo()
+    with pytest.warns(RuntimeWarning, match="unusable entry"):
+        assert cache.load(d, sig, ctx) is None
+    assert cache.stats["errors"] == 1 and cache.entries() == []
+
+
+def test_build_exec_cache_gating(tmp_path):
+    assert build_exec_cache(EngineConfig()) is None
+    c = build_exec_cache(EngineConfig(
+        compile_cache_dir=str(tmp_path / "execs")))
+    assert isinstance(c, StageExecCache) and c.enabled
+    assert c.entries() == []
+
+
+def test_prewarm_signature_matches_concrete():
+    """The abstract pre-warm path must resolve to the same slot a concrete
+    dispatch hits: ShapeDtypeStruct and device-array signatures agree."""
+    abstract = tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in ARGS)
+    assert arg_signature(abstract) == arg_signature(ARGS)

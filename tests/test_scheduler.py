@@ -6,6 +6,7 @@ import dataclasses
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.configs.rads import QUERIES, EngineConfig
 from repro.core import (Pattern, PipelineScheduler, StageRunner, best_plan,
                         canonicalize, enumerate_oracle, rads_enumerate)
@@ -131,6 +132,33 @@ def test_steal_disabled_same_results(erdos):
                        dataclasses.replace(CFG, steal_from_longest=False),
                        mode="sim")
     assert canonicalize(a.embeddings, pat) == canonicalize(b.embeddings, pat)
+
+
+@pytest.mark.skipif(not compat.HAS_EXECUTABLE_SERIALIZATION,
+                    reason="jax build cannot serialize executables")
+def test_warm_run_zero_compiles(erdos, tmp_path):
+    """With a populated persistent executable store, a brand-new
+    StageRunner performs ZERO stage traces/compiles — the whole warm run
+    is executable dispatch (the PR-7 latency-floor invariant), and the
+    results stay byte-identical with the traced cold run."""
+    from repro.runtime.compile_cache import StageExecCache
+
+    g, pg = erdos
+    pat = Pattern.from_edges(QUERIES["q1"])
+    cfg = dataclasses.replace(CFG, compile_cache_dir=str(tmp_path / "ex"))
+    cold = rads_enumerate(pg, pat, cfg, mode="sim")
+    assert cold.stats["exec_cache_enabled"]
+    assert cold.stats["compiles"] > 0
+    assert cold.stats["exec_cache"]["stores"] == cold.stats["compiles"]
+    StageExecCache.clear_memory_memo()       # force on-disk deserialization
+    warm = rads_enumerate(pg, pat, cfg, mode="sim")
+    assert warm.count == cold.count
+    assert canonicalize(warm.embeddings, pat) == canonicalize(
+        cold.embeddings, pat)
+    assert warm.stats["compiles"] == 0
+    assert warm.stats["compile_s"] == 0.0
+    assert warm.stats["compile_cache_hits"] > 0
+    assert warm.stats["exec_cache"]["misses"] == 0
 
 
 def test_pallas_membership_engine_matches_oracle():
