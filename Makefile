@@ -45,6 +45,23 @@ collect-check:
 ## on any count, if a varint row's actual wire bytes are not below raw, or
 ## if the actual coded fetch bytes exceed the modeled
 ## bytes_fetch_compressed baseline by more than 5%.
+## cross-process scalability smoke: dist backend at 1/2/4 OS processes on
+## the bfs-partitioned powerlaw cell, gated on (a) per-process wire-byte
+## sums equaling the in-process sim totals byte-for-byte, (b) dist counts
+## == sim counts, (c) max-per-process comm bytes strictly decreasing as N
+## grows. Writes BENCH_scalability.json; degrades to sim-only curves (and
+## skips the gates) when jaxlib lacks gloo CPU collectives.
+.PHONY: bench-scale
+bench-scale:
+	$(PY) -m benchmarks.run --only scale --smoke
+	@$(PY) -c "import json; \
+	d=json.load(open('BENCH_scalability.json')); \
+	assert not d['gate_failures'], d['gate_failures']; \
+	q=next(iter(d['queries'].values())); \
+	print('bench-scale: dist_available=%s ndevs=%s count=%s ' \
+	'max_dev=%s skew=%s' % (d['dist_available'], d['ndevs'], q['count'], \
+	q['bytes_wire_max_dev'], q['comm_skew']))"
+
 .PHONY: bench-smoke
 bench-smoke:
 	XLA_FLAGS="--xla_cpu_multi_thread_eigen=false" \

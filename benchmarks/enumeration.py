@@ -254,6 +254,9 @@ def run(datasets=("dblp_bench", "roadnet_bench", "livejournal_bench",
                     bytes_verify=float(st["bytes_verify"]),
                     bytes_wire_fetch=float(st["bytes_wire_fetch"]),
                     bytes_wire_verify=float(st["bytes_wire_verify"]),
+                    bytes_wire_fetch_dev=list(st["bytes_wire_fetch_dev"]),
+                    bytes_wire_verify_dev=list(st["bytes_wire_verify_dev"]),
+                    comm_skew=float(st["comm_skew"]),
                     bytes_fetch_compressed=float(
                         st["bytes_fetch_compressed"]),
                     bytes_saved_cache=float(st["bytes_saved_cache"]),

@@ -21,8 +21,8 @@ def main() -> None:
                     help="comma list: enumeration,compression,plan,scale,"
                          "kernels,roofline")
     ap.add_argument("--smoke", action="store_true",
-                    help="~30s subset (enumeration only honors this): "
-                         "one dataset/query + sync-vs-async JSON")
+                    help="fast subset (enumeration + scale honor this): "
+                         "one dataset/query per group")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -46,7 +46,7 @@ def main() -> None:
         _safe(plan_effect.run, failures, "plan")
     if want("scale"):
         from benchmarks import scalability
-        _safe(scalability.run, failures, "scale")
+        _safe(lambda: scalability.run(smoke=args.smoke), failures, "scale")
     if want("roofline"):
         from benchmarks import roofline
         _safe(roofline.run, failures, "roofline")

@@ -17,7 +17,18 @@ JAX moves fast and this repo has to run on whatever the container ships:
   on load.  The AOT stage-executable cache
   (:mod:`repro.runtime.compile_cache`) needs the former; both probes
   degrade to ``None``/``False`` so the cache silently disables itself on
-  JAX builds without executable serialization.
+  JAX builds without executable serialization;
+* multi-process CPU collectives: 0.4.x CPU backends only run cross-process
+  computations when the gloo TCP collectives implementation is selected
+  *before the backend client is created* (``jax.config.update(
+  "jax_cpu_collectives_implementation", "gloo")``) — newer builds default
+  to it, older ones lack it entirely.  The ``dist`` exchange backend
+  (:mod:`repro.core.exchange`) and its launcher go through
+  :func:`enable_cpu_collectives` / :func:`distributed_initialize` so the
+  whole bootstrap quirk surface stays in this file, and
+  ``host_local_array_to_global_array`` (the only blessed way to build a
+  process-global array from per-host values on 0.4.x) is wrapped by
+  :func:`global_shard` / :func:`global_replicate`.
 
 Every call-site in this repo imports the resolved symbol from here, so a
 JAX upgrade touches exactly this file.  Probes run once at import time and
@@ -37,7 +48,9 @@ __all__ = [
     "shard_map", "tree_map", "tree_leaves", "tree_reduce",
     "tree_map_with_path", "with_sharding_constraint", "cost_analysis",
     "memory_analysis", "HAS_EXECUTABLE_SERIALIZATION", "serialize_compiled",
-    "deserialize_compiled", "version_stamp",
+    "deserialize_compiled", "version_stamp", "HAS_MULTIPROCESS_CPU",
+    "enable_cpu_collectives", "distributed_initialize", "process_index",
+    "process_count", "global_shard", "global_replicate",
 ]
 
 
@@ -202,3 +215,129 @@ def version_stamp() -> str:
 
     return (f"jax={jax.__version__};jaxlib={jaxlib.__version__};"
             f"backend={jax.default_backend()};ndev={jax.device_count()}")
+
+
+# --------------------------------------------------------------------------- #
+# Multi-process bootstrap (the `dist` exchange backend)
+# --------------------------------------------------------------------------- #
+def _probe_multiprocess_cpu() -> bool:
+    """Does this jaxlib ship the gloo TCP collectives the CPU backend needs
+    for cross-process computations?  (0.4.36 does; much older builds raise
+    "Multiprocess computations aren't implemented on the CPU backend".)"""
+    try:
+        from jax._src.lib import xla_client
+
+        return hasattr(xla_client._xla, "make_gloo_tcp_collectives")
+    except Exception:                                        # pragma: no cover
+        return False
+
+
+HAS_MULTIPROCESS_CPU = _probe_multiprocess_cpu()
+
+
+def enable_cpu_collectives() -> bool:
+    """Select the gloo CPU collectives implementation.
+
+    MUST run before the CPU backend client is created (i.e. before any
+    computation or ``jax.devices()`` call) — the flag is read once at
+    client construction.  Returns False (no-op) on builds without gloo or
+    without the config knob; callers treat False as "multi-process
+    unavailable" and skip."""
+    if not HAS_MULTIPROCESS_CPU:
+        return False
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+        return True
+    except Exception:                                        # pragma: no cover
+        return False
+
+
+def distributed_initialize(coordinator_address: str, num_processes: int,
+                           process_id: int) -> bool:
+    """``jax.distributed.initialize`` with the kwargs this build accepts.
+
+    Returns False instead of raising when the build has no distributed
+    runtime or the bootstrap fails (coordinator unreachable) — the caller
+    degrades to single-process / skips."""
+    try:
+        init = jax.distributed.initialize
+    except AttributeError:                                   # pragma: no cover
+        return False
+    kw = dict(coordinator_address=coordinator_address,
+              num_processes=num_processes, process_id=process_id)
+    accepted = set(inspect.signature(init).parameters)
+    try:
+        init(**{k: v for k, v in kw.items() if k in accepted})
+        return True
+    except Exception:
+        return False
+
+
+def process_index() -> int:
+    try:
+        return int(jax.process_index())
+    except Exception:                                        # pragma: no cover
+        return 0
+
+
+def process_count() -> int:
+    try:
+        return int(jax.process_count())
+    except Exception:                                        # pragma: no cover
+        return 1
+
+
+def _spans_processes(mesh: Mesh) -> bool:
+    me = process_index()
+    return any(d.process_index != me for d in mesh.devices.flat)
+
+
+def global_shard(tree, mesh: Mesh, axis: str = "data"):
+    """Shard every leaf of ``tree`` along its leading axis over
+    ``mesh[axis]`` — the one entry point that works both single-process
+    (plain ``device_put``) and multi-process (each process contributes its
+    contiguous block of the leading axis through
+    ``multihost_utils.host_local_array_to_global_array``, the 0.4.x way to
+    assemble a global array; ``device_put`` onto non-addressable devices
+    raises there).  Every process must hold the FULL host value and call
+    with identical shapes — the per-process slice is taken here."""
+    import numpy as np
+    from jax.sharding import NamedSharding
+
+    multi = _spans_processes(mesh)
+    if multi:
+        from jax.experimental import multihost_utils
+
+        devs = list(mesh.devices.flat)
+        mine = [i for i, d in enumerate(devs)
+                if d.process_index == process_index()]
+        lo, hi = mine[0], mine[-1] + 1
+
+    def put(x):
+        spec = PartitionSpec(axis, *([None] * (x.ndim - 1)))
+        if not multi:
+            return jax.device_put(x, NamedSharding(mesh, spec))
+        return multihost_utils.host_local_array_to_global_array(
+            np.asarray(x)[lo:hi], mesh, spec)
+
+    return tree_map(put, tree)
+
+
+def global_replicate(tree, mesh: Mesh):
+    """Fully-replicated process-global arrays from identical host values
+    (every process must pass the same data — the callers are deterministic
+    host computations, which is the `dist` backend's standing contract)."""
+    import numpy as np
+    from jax.sharding import NamedSharding
+
+    multi = _spans_processes(mesh)
+    if multi:
+        from jax.experimental import multihost_utils
+
+    def put(x):
+        if not multi:
+            return jax.device_put(x, NamedSharding(mesh, PartitionSpec()))
+        return multihost_utils.host_local_array_to_global_array(
+            np.asarray(x), mesh, PartitionSpec())
+
+    return tree_map(put, tree)

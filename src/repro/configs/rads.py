@@ -53,11 +53,25 @@ class EngineConfig:
     # --- cross-run priors (core/priors.py) ---------------------------------- #
     priors_path: str = ""              # JSON cache of per-(pattern, graph)
                                        # capacity/cost priors ("" = disabled)
+    # --- pipelined group communication (core/exchange.py) ------------------- #
+    comm_pipeline: bool = False        # split each wave's a2a into comm_chunks
+                                       # back-to-back sub-exchanges so chunk
+                                       # k's transfer overlaps chunk k+1's
+                                       # encode/decode (arXiv:1804.09764-style
+                                       # pipelined groups; bit-identical)
+    comm_chunks: int = 4               # sub-exchanges per a2a when
+                                       # comm_pipeline is on (power of two so
+                                       # it divides the capacity-ladder axes)
     # --- persistent stage-executable cache (runtime/compile_cache.py) ------- #
     compile_cache_dir: str = ""        # per-host on-disk store of serialized
                                        # stage executables ("" = disabled);
                                        # with priors v2 a warm run performs
                                        # zero traces/compiles
+    compile_cache_budget_bytes: int = 0  # LRU size budget for the store: on
+                                       # every save, least-recently-used
+                                       # .stagex envelopes (file mtime) are
+                                       # evicted until the store fits
+                                       # (0 = unbounded, the old behaviour)
     prewarm: bool = True               # resolve the stage ladder on a
                                        # background thread during group
                                        # formation (off the critical path)
@@ -106,6 +120,23 @@ class EngineConfig:
             raise ValueError(
                 f"prewarm must be a bool (background stage pre-warm), "
                 f"got {self.prewarm!r}")
+        if not isinstance(self.comm_pipeline, bool):
+            raise ValueError(
+                f"comm_pipeline must be a bool (pipelined group "
+                f"communication), got {self.comm_pipeline!r}")
+        if (not isinstance(self.comm_chunks, int) or self.comm_chunks < 1
+                or (self.comm_chunks & (self.comm_chunks - 1))):
+            raise ValueError(
+                f"comm_chunks must be a positive power of two (so chunks "
+                f"divide the power-of-two capacity axes evenly), "
+                f"got {self.comm_chunks!r}")
+        if (not isinstance(self.compile_cache_budget_bytes, int)
+                or isinstance(self.compile_cache_budget_bytes, bool)
+                or self.compile_cache_budget_bytes < 0):
+            raise ValueError(
+                f"compile_cache_budget_bytes must be an int >= 0 "
+                f"(0 = unbounded store), "
+                f"got {self.compile_cache_budget_bytes!r}")
 
 
 # dataset stand-ins: name -> generator kwargs (see graph/generators.py)

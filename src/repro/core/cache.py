@@ -129,14 +129,12 @@ class AdjCache:
         return int(sum(x.size * x.dtype.itemsize for x in leaves))
 
     def shard(self, mesh, axis: str = "data") -> "AdjCache":
-        """device_put every leaf sharded on its leading ``ndev`` axis."""
-        from jax.sharding import NamedSharding, PartitionSpec as P
+        """Every leaf sharded on its leading ``ndev`` axis — through
+        :func:`repro.compat.global_shard` so a process-spanning mesh (the
+        ``dist`` backend) works identically to a local one."""
+        from repro import compat
 
-        def put(x):
-            spec = P(axis, *([None] * (x.ndim - 1)))
-            return jax.device_put(x, NamedSharding(mesh, spec))
-
-        return jax.tree_util.tree_map(put, self)
+        return compat.global_shard(self, mesh, axis)
 
     # -- device-side ops (stacked layout; vmapped per device) --------------- #
     def updated(self, ids: jnp.ndarray, hit: jnp.ndarray, way: jnp.ndarray,

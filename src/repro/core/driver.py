@@ -28,6 +28,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro import compat
 from repro.configs.rads import DEFAULT_ENGINE, EngineConfig
 from repro.core.cache import build_cache
 from repro.core.engine import PlanData, build_plan_data
@@ -69,7 +70,10 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
                    runner_cache: dict | None = None) -> EnumerationResult:
     """``mode`` selects a registered exchange backend: 'sim' (reference),
     'gather' (device-local, meshless), 'spmd' (sharded production path —
-    requires ``mesh``); ``cfg.storage_format`` selects the on-device
+    requires ``mesh``), 'dist' (spmd across ``jax.distributed`` processes —
+    requires a process-spanning ``mesh``; see :mod:`repro.launch.dist_worker`
+    for the bootstrap and :func:`merge_process_stats` for combining the
+    per-process stats); ``cfg.storage_format`` selects the on-device
     adjacency layout ('dense' | 'bucketed').
 
     ``runner_cache``: optional dict the caller owns.  Repeat calls with the
@@ -81,6 +85,12 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
     explicit_plan = plan
     plan = plan or best_plan(pattern, cfg.plan_rho)
     pd = build_plan_data(plan)
+
+    if mode == "dist" and cfg.pipeline_depth == "auto":
+        # cross-process determinism: every process must dispatch identical
+        # collectives in identical order, and the adaptive depth steers
+        # from *local* wall timing — pin it to the double-buffered default
+        cfg = dataclasses.replace(cfg, pipeline_depth=2)
 
     # ---- capacity / cost priors (persisted §6 calibration) ---------------- #
     pkey = priors_key(pattern, pg) if cfg.priors_path else None
@@ -112,13 +122,16 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
     if runner is None:
         g = device_graph(pg, cfg.storage_format)
         adj_cache = build_cache(cfg, g)           # None when disabled
-        if mode == "spmd":
+        if mode in ("spmd", "dist"):
             g = g.shard(mesh)
             if adj_cache is not None:
                 adj_cache = adj_cache.shard(mesh)
         runner = StageRunner(g, pd, cfg,
                              Exchange(mode=mode, mesh=mesh,
-                                      wire_format=cfg.wire_format),
+                                      wire_format=cfg.wire_format,
+                                      comm_chunks=(cfg.comm_chunks
+                                                   if cfg.comm_pipeline
+                                                   else 1)),
                              cache=adj_cache)
         if ck is not None:
             runner_cache[ck] = (pg, explicit_plan, runner)
@@ -147,6 +160,12 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
                  n_dist_seeds=len(dist_seeds_all),
                  bytes_fetch=0.0, bytes_verify=0.0, n_groups=0,
                  bytes_wire_fetch=0.0, bytes_wire_verify=0.0,
+                 bytes_wire_fetch_dev=np.zeros(ndev),
+                 bytes_wire_verify_dev=np.zeros(ndev),
+                 process_index=compat.process_index(),
+                 process_count=compat.process_count(),
+                 comm_pipeline=bool(cfg.comm_pipeline),
+                 comm_chunks=(cfg.comm_chunks if cfg.comm_pipeline else 1),
                  wire_format=cfg.wire_format,
                  wire_format_requested=requested_wire,
                  wire_auto_reason=wire_reason,
@@ -179,6 +198,10 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
         stats["bytes_verify"] += float(st["bytes_verify"])
         stats["bytes_wire_fetch"] += float(st["bytes_wire_fetch"])
         stats["bytes_wire_verify"] += float(st["bytes_wire_verify"])
+        stats["bytes_wire_fetch_dev"] += np.asarray(
+            st["bytes_wire_fetch_dev"], dtype=np.float64)
+        stats["bytes_wire_verify_dev"] += np.asarray(
+            st["bytes_wire_verify_dev"], dtype=np.float64)
         stats["bytes_fetch_compressed"] += float(st["bytes_fetch_compressed"])
         stats["bytes_saved_cache"] += float(st["bytes_saved_cache"])
         stats["cache_hits"] += float(st["cache_hits"])
@@ -209,8 +232,11 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
         if cfg.prewarm:
             # resolve the SM-E ladder on a background thread while the
             # queue setup below runs (compile — or store deserialization —
-            # off the critical path)
-            runner.prewarm_async(scap, local_only=True)
+            # off the critical path); with preloaded priors the caps are
+            # trustworthy, so also warm the escalation rung above them —
+            # an overflow run then escalates onto already-resolved stages
+            runner.prewarm_async(scap, local_only=True,
+                                 escalation_rungs=1 if prior else 0)
         queues = [[np.asarray(s, dtype=np.int64)] if len(s) else []
                   for s in sme_seeds]
         c = sched.run(queues, scap, local_only=True, phase="sme",
@@ -251,8 +277,10 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
         scap = 1 << (max_g - 1).bit_length()
         if cfg.prewarm:
             # distributed-phase ladder warms while Algorithm-3 lazy group
-            # formation runs inside the scheduler
-            runner.prewarm_async(scap, local_only=False)
+            # formation runs inside the scheduler (plus one escalation
+            # rung when priors made the caps trustworthy — see SM-E phase)
+            runner.prewarm_async(scap, local_only=False,
+                                 escalation_rungs=1 if prior else 0)
         c = sched.run(queues, scap, local_only=False, phase="dist",
                       auto_start=auto_start)
         if c is not None:
@@ -276,7 +304,22 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
     stats["cache_hit_rate"] = (stats["cache_hits"] / stats["cache_probes"]
                                if stats["cache_probes"] else 0.0)
     stats["node_hist"] = node_hist.tolist()
-    if pkey:
+    # per-device wire-byte attribution -> JSON-friendly lists + the skew
+    # metric the scalability harness plots (max-per-process over mean; the
+    # per-dev sums recover the scalar bytes_wire_* totals exactly)
+    fetch_dev = np.asarray(stats["bytes_wire_fetch_dev"], dtype=np.float64)
+    verify_dev = np.asarray(stats["bytes_wire_verify_dev"], dtype=np.float64)
+    comm_dev = fetch_dev + verify_dev
+    stats["bytes_wire_fetch_dev"] = fetch_dev.tolist()
+    stats["bytes_wire_verify_dev"] = verify_dev.tolist()
+    stats["bytes_wire_max_dev"] = float(comm_dev.max()) if ndev else 0.0
+    mean_dev = float(comm_dev.mean()) if ndev else 0.0
+    stats["comm_skew"] = (float(comm_dev.max()) / mean_dev
+                          if mean_dev > 0 else 1.0)
+    if pkey and compat.process_index() == 0:
+        # under dist every process computes identical logical stats (the
+        # merge asserts it), so only process 0 touches the shared priors
+        # file — last-writer races between processes would drop trials
         entry = dict(per_seed_cost=float(per_seed_cost),
                      caps=stats["final_caps"],
                      node_hist=node_hist.tolist())
@@ -301,3 +344,53 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
     return EnumerationResult(count=total,
                              embeddings=embs if return_embeddings else None,
                              stats=stats)
+
+
+# logical stats every process must agree on byte-for-byte under dist (the
+# replicated finalize hands every host identical wave tuples, so any
+# divergence here means the collectives themselves diverged)
+_MERGE_EQUAL_KEYS = (
+    "bytes_fetch", "bytes_verify", "bytes_wire_fetch", "bytes_wire_verify",
+    "bytes_wire_fetch_dev", "bytes_wire_verify_dev", "bytes_wire_max_dev",
+    "bytes_fetch_compressed", "bytes_saved_cache", "cache_hits",
+    "cache_probes", "comm_skew", "n_waves", "n_groups", "sme_count",
+    "dist_count", "overflow_retries", "cap_escalations", "wire_format")
+# host-local wall/compile timings: the run is as slow as its slowest process
+_MERGE_MAX_KEYS = ("wave_s_total", "compile_s", "sme_pipeline_s",
+                   "dist_pipeline_s")
+
+
+def merge_process_stats(per_proc_stats: list[dict]) -> dict:
+    """Merge the per-process stats dicts of one multi-process ``dist`` run.
+
+    Logical counters (bytes, counts, waves) are *replicated* state — every
+    process retires identical finalize tuples — so equality across
+    processes is asserted, not averaged: a mismatch is a determinism bug,
+    and papering over it with a mean would hide exactly the failure the
+    parity gates exist to catch.  Wall-clock keys are host-local and merge
+    via max (a wave is retired when its slowest process retires it).
+    """
+    if not per_proc_stats:
+        raise ValueError("merge_process_stats needs at least one stats dict")
+    base = per_proc_stats[0]
+    mismatches = []
+    for key in _MERGE_EQUAL_KEYS:
+        if key not in base:
+            continue
+        for i, st in enumerate(per_proc_stats[1:], start=1):
+            if key in st and st[key] != base[key]:
+                mismatches.append(
+                    f"{key}: proc0={base[key]!r} proc{i}={st[key]!r}")
+    if mismatches:
+        raise ValueError(
+            "per-process logical stats diverged (determinism bug): "
+            + "; ".join(mismatches))
+    merged = dict(base)
+    for key in _MERGE_MAX_KEYS:
+        vals = [st[key] for st in per_proc_stats if key in st]
+        if vals:
+            merged[key] = max(float(v) for v in vals)
+    merged["process_count"] = len(per_proc_stats)
+    merged["per_process_wall_s"] = [
+        float(st.get("wave_s_total", 0.0)) for st in per_proc_stats]
+    return merged

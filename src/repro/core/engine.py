@@ -316,6 +316,10 @@ def fetch_exchange(g: DeviceGraph, exch: ExchangeBackend,
         wire_stream_bytes = (
             exch.off_device_payload_bytes(req_len)
             + exch.off_device_payload_bytes(dg_len + ri_len))
+        # sent-bytes attribution: requesters send the id streams, responders
+        # send the row streams — row sums recover wire_stream_bytes exactly
+        wire_dev = (exch.per_dev_sent_bytes(req_len)
+                    + exch.per_dev_sent_bytes(dg_len + ri_len))
         wire_ov = e_ov | r_ov
     else:
         recv = exch.a2a(wire)                          # (ndev, src, fcap)
@@ -338,6 +342,13 @@ def fetch_exchange(g: DeviceGraph, exch: ExchangeBackend,
     full_bytes = exch.off_device_bytes(counts, elem)
     wire_bytes = exch.off_device_bytes(counts - counts_hit, elem) \
         if use_cache else full_bytes
+    if wire_stream_bytes is None:
+        # raw path per-device attribution: requester t sends 4B ids per
+        # entry (eff[t, p]), responder p sends 4*D-byte rows back (eff.T);
+        # the two row sums add up to wire_bytes exactly
+        eff = (counts - counts_hit if use_cache else counts)
+        wire_dev = (exch.per_dev_sent_bytes(eff * 4.0)
+                    + exch.per_dev_sent_bytes(eff.T * (4.0 * D)))
     # the modeled column reuses the codec's sizing pass when it already ran
     comp_ids = (_varint_id_bytes(wire, n) if model_ids is None
                 else model_ids)
@@ -351,6 +362,7 @@ def fetch_exchange(g: DeviceGraph, exch: ExchangeBackend,
         # accounting under 'raw' (per-lane raw escape keeps this <= raw)
         bytes_wire_fetch=(wire_stream_bytes if wire_stream_bytes is not None
                           else wire_bytes),
+        bytes_wire_fetch_dev=wire_dev,
         bytes_saved_cache=full_bytes - wire_bytes,
         # probe/hit counters exist only when there is a cache to probe —
         # a --no-cache run must audit as having zero cache activity
@@ -365,7 +377,10 @@ def verify_exchange(g: DeviceGraph, exch: ExchangeBackend,
                     pa, pb, pmask, vcap: int, use_pallas: bool = False):
     """Batched verifyE over the EVI (§3.2). pa/pb/pmask: (ndev, R, K).
     Pairs routed to owner(pa). Returns (ok (ndev, R, K) — True where the
-    edge exists or the slot is inactive, overflow, off_bytes, wire_bytes).
+    edge exists or the slot is inactive, overflow, off_bytes, wire_bytes,
+    wire_dev) where ``wire_dev`` is the per-device *sent*-byte attribution
+    of ``wire_bytes`` (requesters send the pair streams, owners send the
+    answers; its sum recovers ``wire_bytes`` exactly).
 
     ``off_bytes`` is the raw-equivalent accounting (8 B/pair + 1 B/answer,
     comparable across wire formats); ``wire_bytes`` is what actually
@@ -416,6 +431,8 @@ def verify_exchange(g: DeviceGraph, exch: ExchangeBackend,
         back = wire_codec.unpack_bools_lanes(back_s, counts, vcap)
         wire_bytes = (exch.off_device_payload_bytes(a_len + b_len)
                       + exch.off_device_payload_bytes(ans_len))
+        wire_dev = (exch.per_dev_sent_bytes(a_len + b_len)
+                    + exch.per_dev_sent_bytes(ans_len))
         ov = ov | p_ov
     else:
         # the (a, b) request buffers travel as one sub-state through the
@@ -436,7 +453,11 @@ def verify_exchange(g: DeviceGraph, exch: ExchangeBackend,
     off_bytes = exch.off_device_bytes(counts, 8 + 1)
     if wire_bytes is None:
         wire_bytes = off_bytes
-    return ok, jnp.any(ov), off_bytes, wire_bytes
+        # requester t sends 8B pairs (counts[t, p]); owner p sends 1B
+        # answers back (counts.T) — row sums add up to off_bytes exactly
+        wire_dev = (exch.per_dev_sent_bytes(counts * 8.0)
+                    + exch.per_dev_sent_bytes(counts.T * 1.0))
+    return ok, jnp.any(ov), off_bytes, wire_bytes, wire_dev
 
 
 # --------------------------------------------------------------------------- #
@@ -563,6 +584,10 @@ class WaveState:
     bytes_verify: jnp.ndarray    # () f32 — off-device verifyE traffic
     bytes_wire_fetch: jnp.ndarray   # () f32 — actual coded fetchV stream bytes
     bytes_wire_verify: jnp.ndarray  # () f32 — actual coded verifyE stream bytes
+    bytes_wire_fetch_dev: jnp.ndarray   # (ndev,) f32 — fetchV wire bytes by
+    # sending device (sums to bytes_wire_fetch; skew-curve source)
+    bytes_wire_verify_dev: jnp.ndarray  # (ndev,) f32 — verifyE wire bytes by
+    # sending device (sums to bytes_wire_verify)
     bytes_fetch_compressed: jnp.ndarray  # () f32 — modeled delta+varint wire
     bytes_saved_cache: jnp.ndarray       # () f32 — fetchV bytes hit-masked
     cache_hits: jnp.ndarray      # () f32 — unique foreign ids served by cache
@@ -581,6 +606,7 @@ class WaveState:
         return ((self.rows, self.alive, self.seed_slot, self.overflow,
                  self.lost, self.bytes_fetch, self.bytes_verify,
                  self.bytes_wire_fetch, self.bytes_wire_verify,
+                 self.bytes_wire_fetch_dev, self.bytes_wire_verify_dev,
                  self.bytes_fetch_compressed, self.bytes_saved_cache,
                  self.cache_hits, self.cache_probes,
                  self.compile_cache_hits,
@@ -608,6 +634,8 @@ def init_wave(g: DeviceGraph, seeds, seed_mask) -> WaveState:
         bytes_verify=jnp.zeros((), jnp.float32),
         bytes_wire_fetch=jnp.zeros((), jnp.float32),
         bytes_wire_verify=jnp.zeros((), jnp.float32),
+        bytes_wire_fetch_dev=jnp.zeros((ndev,), jnp.float32),
+        bytes_wire_verify_dev=jnp.zeros((ndev,), jnp.float32),
         bytes_fetch_compressed=jnp.zeros((), jnp.float32),
         bytes_saved_cache=jnp.zeros((), jnp.float32),
         cache_hits=jnp.zeros((), jnp.float32),
@@ -641,6 +669,8 @@ def fetch_stage(g: DeviceGraph, pd: PlanData, cfg: EngineConfig,
         state, overflow=state.overflow | f_ov,
         bytes_fetch=state.bytes_fetch + fs["bytes_fetch"],
         bytes_wire_fetch=state.bytes_wire_fetch + fs["bytes_wire_fetch"],
+        bytes_wire_fetch_dev=(state.bytes_wire_fetch_dev
+                              + fs["bytes_wire_fetch_dev"]),
         bytes_fetch_compressed=(state.bytes_fetch_compressed
                                 + fs["bytes_fetch_compressed"]),
         bytes_saved_cache=state.bytes_saved_cache + fs["bytes_saved_cache"],
@@ -697,17 +727,20 @@ def verify_stage(g: DeviceGraph, pd: PlanData, cfg: EngineConfig,
     alive = state.alive
     overflow, bytes_verify = state.overflow, state.bytes_verify
     bytes_wire_verify = state.bytes_wire_verify
+    bytes_wire_verify_dev = state.bytes_wire_verify_dev
     if (not local_only) and unit_evi_width(pd, ui) > 0:
-        ok, v_ov, v_b, v_wb = verify_exchange(
+        ok, v_ov, v_b, v_wb, v_wd = verify_exchange(
             g, exch, state.pend_a, state.pend_b, state.pend_m,
             cfg.verify_cap, use_pallas=cfg.use_pallas_kernels)
         alive = alive & jnp.all(ok, axis=-1)
         overflow = overflow | v_ov
         bytes_verify = bytes_verify + v_b
         bytes_wire_verify = bytes_wire_verify + v_wb
+        bytes_wire_verify_dev = bytes_wire_verify_dev + v_wd
     return replace(state, alive=alive, overflow=overflow,
                    bytes_verify=bytes_verify,
                    bytes_wire_verify=bytes_wire_verify,
+                   bytes_wire_verify_dev=bytes_wire_verify_dev,
                    rounds_alive=state.rounds_alive + (alive.sum(axis=-1),),
                    pend_a=None, pend_b=None, pend_m=None)
 
@@ -726,6 +759,8 @@ def finalize_wave(state: WaveState, exec_hits=0.0):
                  bytes_verify=state.bytes_verify,
                  bytes_wire_fetch=state.bytes_wire_fetch,
                  bytes_wire_verify=state.bytes_wire_verify,
+                 bytes_wire_fetch_dev=state.bytes_wire_fetch_dev,
+                 bytes_wire_verify_dev=state.bytes_wire_verify_dev,
                  bytes_fetch_compressed=state.bytes_fetch_compressed,
                  bytes_saved_cache=state.bytes_saved_cache,
                  cache_hits=state.cache_hits,

@@ -13,10 +13,16 @@ Built-in backends, selected with ``Exchange(mode)``:
                reference semantics for tests.
 * ``spmd``   — leading axis sharded over the mesh's ``data`` axis, a2a is a
                real ``jax.lax.all_to_all`` under ``shard_map`` (resolved
-               through :mod:`repro.compat`) — the production path.
+               through :mod:`repro.compat`) — the single-process
+               production path.
 * ``gather`` — the same request/response protocol as ``sim`` implemented
                with plain device-local gathers; runs on CPU-only
                single-process hosts with no mesh at all.
+* ``dist``   — ``spmd`` across **process boundaries**: the mesh spans every
+               ``jax.distributed``-initialized process (one engine
+               "machine" M_t per process), so the same shard_map
+               ``all_to_all`` lowers to real cross-process collectives
+               (gloo TCP on CPU, ICI/DCN on TPU).
 
 Every backend also carries a **wire format** (``wire_format="raw" |
 "varint"``, selected via ``EngineConfig.wire_format`` / ``--wire``): with
@@ -28,6 +34,53 @@ accounting sums the *actual* stream lengths
 element sizes.  Results are wire-format-invariant (the codecs are exact).
 
 New backends register with ``@register_exchange_backend("name")``.
+
+The ``dist`` backend: bootstrap protocol
+----------------------------------------
+Launch is coordinator-based and flag-compatible with real multi-host: every
+process runs the same program (:mod:`repro.launch.dist_worker`) with
+``--coordinator HOST:PORT --num-processes N --process-id I``.  Each worker
+(1) selects the CPU gloo collectives *before* any backend client exists,
+(2) calls ``jax.distributed.initialize``, (3) builds the identical
+deterministic dataset/partition/plan from the shared flags, and (4) builds
+a 1-D ``("data",)`` mesh over all N processes' devices.  All of the
+version-sensitive steps live in :mod:`repro.compat`
+(``enable_cpu_collectives`` / ``distributed_initialize`` /
+``global_shard``); this module only assumes a mesh whose ``data`` axis may
+span processes.  Graph and cache pytrees become process-global arrays via
+``compat.global_shard`` (each process contributes its own partition
+block); everything else — seeds, scheduler decisions, retry/escalation —
+is computed redundantly and identically on every process, which is the
+standing SPMD contract: **every process must dispatch the same collectives
+in the same order**, so the driver pins ``pipeline_depth="auto"`` to a
+fixed depth under ``dist`` (timing-adaptive depth could diverge) and only
+process 0 persists priors/artifacts.
+
+Pipelined group communication (``comm_chunks``)
+-----------------------------------------------
+``EngineConfig.comm_pipeline`` splits each wave's a2a into ``comm_chunks``
+sub-exchanges dispatched back-to-back (the pipelined adaptive-group
+communication of arXiv:1804.09764): on transports with real latency the
+transfer of chunk *k* overlaps the encode/decode compute of chunk *k+1*,
+riding the same contiguous-drain dispatch order the scheduler already
+guarantees.  The chunking contract: buffers are split **positionally along
+the fixed per-peer capacity axis** (axis 2 of the ``(src, peer, cap, ...)``
+request layout) *after* any wire coding, and the transpose protocol
+``out[t, s] = x[s, t]`` is applied per chunk — concatenating the chunk
+results is bit-identical to the unchunked exchange, and all ``bytes_*``
+accounting is computed from the per-peer count/length matrices (never from
+the chunk layout), so byte stats are chunk-invariant by construction.
+Buffers whose capacity axis does not divide evenly (or 2-D length
+matrices) go in one shot.
+
+Why stats merge host-side: per-wave stats ride the replicated finalize
+output, so every process computes identical *logical* totals (bytes,
+counts, hits) — cross-process agreement is therefore a correctness check,
+not a reduction.  Wall-clock and compile seconds genuinely differ per
+process, so the scalability harness collects each process's stats dict and
+merges them in :func:`repro.core.driver.merge_process_stats` (asserts the
+logical stats agree byte-for-byte, takes the max over wall stats) instead
+of burning a collective on numbers the device never needs.
 """
 from __future__ import annotations
 
@@ -53,9 +106,30 @@ class ExchangeBackend:
     mesh: Mesh | None = None
     axis: str = "data"
     wire_format: str = "raw"   # 'raw' int32 slabs | 'varint' coded u8 streams
+    comm_chunks: int = 1       # >1: split each a2a into that many
+                               # back-to-back sub-exchanges along the
+                               # per-peer capacity axis (comm pipelining —
+                               # see module docstring; bit-identical)
 
     def a2a(self, x: jnp.ndarray) -> jnp.ndarray:
-        """x: (ndev_src, ndev_dst, ...) -> out[t, s] = x[s, t]."""
+        """x: (ndev_src, ndev_dst, ...) -> out[t, s] = x[s, t].
+
+        With ``comm_chunks > 1`` the exchange is dispatched as that many
+        positional sub-exchanges along axis 2 (the fixed per-peer capacity
+        axis) so chunk k's transfer overlaps chunk k+1's encode/decode on
+        latency-bound transports; the transpose only permutes axes 0/1, so
+        the concatenated result is bit-identical.  Buffers without an
+        evenly-divisible capacity axis (e.g. the 2-D per-peer length
+        matrices of the coded wire paths) go in one shot."""
+        c = self.comm_chunks
+        if c > 1 and x.ndim >= 3 and x.shape[2] >= c and x.shape[2] % c == 0:
+            return jnp.concatenate(
+                [self._a2a(part) for part in jnp.split(x, c, axis=2)],
+                axis=2)
+        return self._a2a(x)
+
+    def _a2a(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Single-shot transport: out[t, s] = x[s, t] (backend-specific)."""
         raise NotImplementedError
 
     def a2a_tree(self, tree):
@@ -94,6 +168,17 @@ class ExchangeBackend:
         off = byte_matrix * (1 - jnp.eye(ndev, dtype=byte_matrix.dtype))
         return off.sum().astype(jnp.float32)
 
+    def per_dev_sent_bytes(self, byte_matrix: jnp.ndarray) -> jnp.ndarray:
+        """Per-device off-device *sent* bytes: row sums of a per-peer byte
+        matrix (``byte_matrix[t, p]`` = payload bytes ``t`` sends to ``p``)
+        with the free diagonal masked.  Returns ``(ndev,)`` f32; summing it
+        recovers the matching scalar accounting exactly, which is the
+        invariant the scalability harness's skew curves (max-per-process vs
+        mean) are gated on."""
+        ndev = byte_matrix.shape[0]
+        off = byte_matrix * (1 - jnp.eye(ndev, dtype=byte_matrix.dtype))
+        return off.sum(axis=1).astype(jnp.float32)
+
 
 _BACKENDS: dict[str, type[ExchangeBackend]] = {}
 
@@ -113,12 +198,14 @@ def exchange_backends() -> tuple[str, ...]:
 
 
 def Exchange(mode: str = "sim", mesh: Mesh | None = None,
-             axis: str = "data", wire_format: str = "raw") -> ExchangeBackend:
+             axis: str = "data", wire_format: str = "raw",
+             comm_chunks: int = 1) -> ExchangeBackend:
     """Factory kept name-compatible with the old two-branch dataclass:
     ``Exchange("sim")`` / ``Exchange(mode="spmd", mesh=mesh)``.
-    ``wire_format`` selects the on-the-wire payload coding (see module
-    docstring); it is transport-independent, so every backend supports
-    both."""
+    ``wire_format`` selects the on-the-wire payload coding and
+    ``comm_chunks`` the pipelined sub-exchange count (see module
+    docstring); both are transport-independent, so every backend supports
+    them."""
     try:
         cls = _BACKENDS[mode]
     except KeyError:
@@ -129,7 +216,11 @@ def Exchange(mode: str = "sim", mesh: Mesh | None = None,
         raise ValueError(
             f"unknown wire format {wire_format!r}; expected 'raw' or "
             f"'varint'")
-    return cls(mesh=mesh, axis=axis, wire_format=wire_format)
+    if not isinstance(comm_chunks, int) or comm_chunks < 1:
+        raise ValueError(
+            f"comm_chunks must be an int >= 1, got {comm_chunks!r}")
+    return cls(mesh=mesh, axis=axis, wire_format=wire_format,
+               comm_chunks=comm_chunks)
 
 
 # --------------------------------------------------------------------------- #
@@ -140,7 +231,7 @@ def Exchange(mode: str = "sim", mesh: Mesh | None = None,
 class SimExchange(ExchangeBackend):
     """Single-device reference: the all-to-all is an axis swap."""
 
-    def a2a(self, x: jnp.ndarray) -> jnp.ndarray:
+    def _a2a(self, x: jnp.ndarray) -> jnp.ndarray:
         return jnp.swapaxes(x, 0, 1)
 
     def all_reduce_sum(self, x: jnp.ndarray) -> jnp.ndarray:
@@ -157,7 +248,7 @@ class GatherExchange(ExchangeBackend):
     RDMA/queue-pair transport would take on a CPU-only single-process
     host, and a third registry entry proving backends are pluggable."""
 
-    def a2a(self, x: jnp.ndarray) -> jnp.ndarray:
+    def _a2a(self, x: jnp.ndarray) -> jnp.ndarray:
         ndev = x.shape[0]
         # destination t gathers its column from every source's row
         return jax.vmap(lambda t: jnp.take(x, t, axis=1))(jnp.arange(ndev))
@@ -180,7 +271,7 @@ class SpmdExchange(ExchangeBackend):
     def _spec(self, ndim: int) -> P:
         return P(self.axis, *([None] * (ndim - 1)))
 
-    def a2a(self, x: jnp.ndarray) -> jnp.ndarray:
+    def _a2a(self, x: jnp.ndarray) -> jnp.ndarray:
         def body(xl):  # (1, ndev, ...)
             out = jax.lax.all_to_all(xl[0], self.axis, split_axis=0,
                                      concat_axis=0, tiled=True)
@@ -197,6 +288,20 @@ class SpmdExchange(ExchangeBackend):
         spec = self._spec(x.ndim)
         return compat.shard_map(body, mesh=self.mesh, in_specs=spec,
                                 out_specs=spec)(x)
+
+
+@register_exchange_backend("dist")
+@dataclass(frozen=True)
+class DistExchange(SpmdExchange):
+    """``spmd`` across process boundaries: same shard_map collectives, but
+    the mesh spans every ``jax.distributed``-initialized process, so each
+    ``all_to_all`` crosses the gloo TCP transport between processes.  All
+    transport mechanics are inherited — the backend exists as a distinct
+    registry entry so the driver, scheduler, and wire heuristics can gate
+    multi-process-only behaviour (host-side stat merging, replicated
+    finalize shardings, pinned pipeline depth) on ``mode == "dist"``
+    without sniffing the mesh.  Bootstrap lives in ``compat`` (see the
+    module docstring's protocol note)."""
 
 
 # --------------------------------------------------------------------------- #

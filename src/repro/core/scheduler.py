@@ -173,11 +173,14 @@ class StageRunner:
     compiling twice, and ``escalate`` bumps a generation counter so a
     stale pre-warm resolution is never installed over the new capacities.
 
-    Capacity escalation doubles the engine caps and clears the slot table
-    (re-resolve — against a warm store that is deserialization, not
-    recompilation).  The graph travels through the compiled stages as a
-    pytree argument, so sharded (spmd) and device-local formats use the
-    same code path.
+    Capacity escalation doubles the engine caps; slots are keyed by the
+    capacities they were traced at, so the table survives escalation —
+    old-rung entries keep serving in-flight waves, and the rung above the
+    priors caps can be pre-warmed ahead of time
+    (``prewarm(..., escalation_rungs=1)``) so an overflow run never
+    compiles on the critical path.  The graph travels through the compiled
+    stages as a pytree argument, so sharded (spmd/dist) and device-local
+    formats use the same code path.
 
     The runner also *owns* the foreign-adjacency cache state
     (:class:`~repro.core.cache.AdjCache`): every dispatched ``fetch_stage``
@@ -202,19 +205,19 @@ class StageRunner:
         self.cache = build_cache(cfg, g) if cache == "auto" else cache
         self.exec_cache = (build_exec_cache(cfg) if exec_cache == "auto"
                            else exec_cache)
-        if exch.mode == "spmd":
+        if exch.mode in ("spmd", "dist"):
             # a Compiled executable bakes its input *shardings*, which the
             # store key (treedef + shape/dtype signature) does not capture
-            # and the abstract pre-warm path cannot reproduce — spmd
-            # resolves concretely (shardings taken from the live args) and
+            # and the abstract pre-warm path cannot reproduce — spmd/dist
+            # resolve concretely (shardings taken from the live args) and
             # in-process only; see prewarm()
             self.exec_cache = None
         self.compiles = 0        # stage executables actually XLA-compiled
         self.compile_s = 0.0     # wall seconds spent lowering + compiling
-        self._slots: dict = {}   # (key, sig) -> Compiled | pending Event
+        self._slots: dict = {}   # (key, caps, sig) -> Compiled | pending Event
         self._lock = threading.Lock()
-        self._gen = 0            # bumped by escalate(): invalidates in-flight
-                                 # pre-warm resolutions of the old capacities
+        self._gen = 0            # bumped by escalate(): aborts in-flight
+                                 # pre-warm walks of the old capacities
         self._hits_pending = 0.0  # store hits awaiting wave attribution
         self._plan_repr = repr(pd)
         self._prewarm_threads: list[threading.Thread] = []
@@ -223,22 +226,33 @@ class StageRunner:
     def n_units(self) -> int:
         return len(self.pd.unit_steps)
 
+    @staticmethod
+    def _escalated(cfg: EngineConfig) -> EngineConfig:
+        """One rung up the capacity ladder — the exact replacement
+        ``escalate()`` applies, shared with the rung pre-warm so a warmed
+        rung lands on the same slot keys a live escalation resolves."""
+        return dataclasses.replace(
+            cfg, frontier_cap=min(cfg.frontier_cap * 2, _MAX_CAP),
+            fetch_cap=min(cfg.fetch_cap * 2, _MAX_CAP),
+            verify_cap=min(cfg.verify_cap * 2, _MAX_CAP))
+
     def escalate(self) -> bool:
         """Double every engine capacity (up to the ceiling) and re-resolve.
 
         The wire-codec stream capacities (:mod:`repro.core.wire`) are
         derived from ``fetch_cap``/``verify_cap`` inside the stages, so
         they escalate — and re-resolve — alongside the engine caps; the
-        cache geometry alone stays fixed."""
+        cache geometry alone stays fixed.  The slot table is *kept*: slots
+        are keyed by the capacities they were traced at, so entries for
+        the old rung stay valid for in-flight waves and entries pre-warmed
+        for the new rung (``prewarm(..., escalation_rungs=1)``) are found
+        immediately — an escalation against a warmed rung resolves without
+        compiling on the critical path."""
         c = self.cfg
         if c.frontier_cap >= _MAX_CAP:
             return False
         with self._lock:
-            self.cfg = dataclasses.replace(
-                c, frontier_cap=min(c.frontier_cap * 2, _MAX_CAP),
-                fetch_cap=min(c.fetch_cap * 2, _MAX_CAP),
-                verify_cap=min(c.verify_cap * 2, _MAX_CAP))
-            self._slots.clear()
+            self.cfg = self._escalated(c)
             self._gen += 1
         return True
 
@@ -257,18 +271,33 @@ class StageRunner:
             self._hits_pending += float(h)
 
     # -- stage resolution ---------------------------------------------------- #
-    def _resolve(self, key, make, args):
-        """The stage executable for ``(key, signature(args))``: in-process
-        slot, else persistent store, else AOT trace + compile (counted).
+    @staticmethod
+    def _caps_key(key, cfg: EngineConfig) -> tuple:
+        """The capacity-ladder component of a slot key.  ``init`` and
+        ``finalize`` trace independently of the engine capacities (their
+        shapes come entirely from the argument signature), so they key on
+        ``()`` and survive escalations without re-resolving; every
+        per-unit stage keys on the caps it closed over."""
+        if key in ("init", "finalize"):
+            return ()
+        return (cfg.frontier_cap, cfg.fetch_cap, cfg.verify_cap)
+
+    def _resolve(self, key, make, args, cfg: EngineConfig):
+        """The stage executable for ``(key, caps(cfg), signature(args))``:
+        in-process slot, else persistent store, else AOT trace + compile
+        (counted).  ``cfg`` is the caller's snapshot — the closures in
+        ``make`` and the slot key both use it, so a concurrent
+        ``escalate`` can never mismatch a traced executable and its key.
 
         A second thread resolving an in-flight slot waits on the first
-        instead of compiling twice; a resolution that straddles an
-        ``escalate`` is handed to its caller but never installed."""
+        instead of compiling twice.  Resolved slots are always installed:
+        with capacities in the key a resolution is valid forever (an old
+        rung's entry still serves in-flight waves; a pre-warmed higher
+        rung's entry serves the escalation that reaches it)."""
         sig = arg_signature(args)
-        skey = (key, sig)
+        skey = (key, self._caps_key(key, cfg), sig)
         while True:
             with self._lock:
-                gen = self._gen
                 entry = self._slots.get(skey)
                 if entry is None:
                     ev = threading.Event()
@@ -281,7 +310,7 @@ class StageRunner:
         try:
             ctx = digest = None
             if self.exec_cache is not None:
-                ctx = stage_context(key, self.cfg, self.exch.mode,
+                ctx = stage_context(key, cfg, self.exch.mode,
                                     self._plan_repr)
                 digest = self.exec_cache.digest(key, sig, ctx)
                 fn = self.exec_cache.load(digest, sig, ctx)
@@ -300,7 +329,7 @@ class StageRunner:
             return fn
         finally:
             with self._lock:
-                if fn is not None and self._gen == gen:
+                if fn is not None:
                     self._slots[skey] = fn
                 elif self._slots.get(skey) is ev:
                     del self._slots[skey]
@@ -311,49 +340,65 @@ class StageRunner:
     def _make_init(self):
         return jax.jit(lambda gg, s, m: init_wave(gg, s, m))
 
-    def _make_fetch(self, ui: int):
-        pd, cfg, exch = self.pd, self.cfg, self.exch
+    def _make_fetch(self, ui: int, cfg: EngineConfig):
+        pd, exch = self.pd, self.exch
         # cache=None is a valid (empty) pytree argument, so one closure
         # serves both the cached and the uncached configuration
         return jax.jit(lambda gg, s, c: fetch_stage(gg, pd, cfg, exch, ui,
                                                     s, False, c))
 
-    def _make_expand(self, ui: int, local_only: bool):
-        pd, cfg = self.pd, self.cfg
+    def _make_expand(self, ui: int, local_only: bool, cfg: EngineConfig):
+        pd = self.pd
         return jax.jit(lambda gg, s, b: expand_stage(gg, pd, cfg, ui, s, b,
                                                      local_only))
 
-    def _make_verify(self, ui: int, local_only: bool):
-        pd, cfg, exch = self.pd, self.cfg, self.exch
+    def _make_verify(self, ui: int, local_only: bool, cfg: EngineConfig):
+        pd, exch = self.pd, self.exch
         return jax.jit(lambda gg, s: verify_stage(gg, pd, cfg, exch, ui, s,
                                                   local_only))
 
     def _make_finalize(self):
+        if self.exch.mode == "dist":
+            # multi-process retire: the single blocking device_get at
+            # _retire can only read *addressable* shards, so the finalize
+            # all-gathers its outputs to every process — each host then
+            # holds the full (identical) result tuple, and the downstream
+            # stat merge is a pure equality check
+            shard = jax.sharding.NamedSharding(
+                self.exch.mesh, jax.sharding.PartitionSpec())
+            return jax.jit(lambda s, h: finalize_wave(s, h),
+                           out_shardings=shard)
         return jax.jit(lambda s, h: finalize_wave(s, h))
 
     # -- stage dispatch ------------------------------------------------------ #
     def init(self, seeds: np.ndarray, mask: np.ndarray) -> WaveState:
         args = (self.g, seeds, mask)
-        return self._resolve("init", self._make_init, args)(*args)
+        return self._resolve("init", self._make_init, args, self.cfg)(*args)
 
     def fetch(self, ui: int, state: WaveState, local_only: bool):
         if local_only:                       # SM-E: no collectives at all
             return state, None
+        cfg = self.cfg
         args = (self.g, state, self.cache)
-        fn = self._resolve(("fetch", ui), lambda: self._make_fetch(ui), args)
+        fn = self._resolve(("fetch", ui),
+                           lambda: self._make_fetch(ui, cfg), args, cfg)
         state, bufs, self.cache = fn(*args)
         return state, bufs
 
     def expand(self, ui: int, state: WaveState, bufs, local_only: bool):
+        cfg = self.cfg
         args = (self.g, state, bufs)
         fn = self._resolve(("expand", ui, local_only),
-                           lambda: self._make_expand(ui, local_only), args)
+                           lambda: self._make_expand(ui, local_only, cfg),
+                           args, cfg)
         return fn(*args)
 
     def verify(self, ui: int, state: WaveState, local_only: bool):
+        cfg = self.cfg
         args = (self.g, state)
         fn = self._resolve(("verify", ui, local_only),
-                           lambda: self._make_verify(ui, local_only), args)
+                           lambda: self._make_verify(ui, local_only, cfg),
+                           args, cfg)
         return fn(*args)
 
     def finalize(self, state: WaveState, exec_hits: float = 0.0):
@@ -361,30 +406,22 @@ class StageRunner:
         classic result tuple as device futures, with the runner's
         persistent-store hit count riding along as a traced scalar."""
         args = (state, np.float32(exec_hits))
-        fn = self._resolve("finalize", self._make_finalize, args)
+        fn = self._resolve("finalize", self._make_finalize, args, self.cfg)
         return fn(*args)
 
     # -- pre-warm ------------------------------------------------------------ #
-    def prewarm(self, scap: int, local_only: bool) -> int:
-        """Resolve the whole stage ladder for seed capacity ``scap`` from
-        abstract values (``jax.eval_shape`` chains the inter-stage shapes;
-        no device work happens beyond compilation itself).  Abstract and
-        concrete dispatches share argument signatures, so a later real
-        wave lands exactly on the slots resolved here.  Returns the number
-        of stages resolved — 0 when aborted by a concurrent escalation
-        (the ladder being warmed no longer matches the live capacities)
-        or under the spmd backend (ShapeDtypeStruct placeholders carry no
-        mesh sharding, and a Compiled stage rejects calls whose input
-        shardings differ from the ones it was lowered with — spmd stages
-        must be resolved from the live sharded arrays)."""
-        if self.exch.mode == "spmd":
-            return 0
-        g, pd, cfg, exch = self.g, self.pd, self.cfg, self.exch
-        gen = self._gen
+    def _prewarm_ladder(self, scap: int, local_only: bool,
+                        cfg: EngineConfig, gen: int) -> int:
+        """Resolve the full stage ladder at ``cfg``'s capacities from
+        abstract values; returns stages resolved, 0 if aborted by a
+        concurrent escalation (the rung being warmed is still installed —
+        slots key on their capacities — but further walking is pointless
+        work the escalated run will redo at its own caps)."""
+        g, pd, exch = self.g, self.pd, self.exch
         seeds = jax.ShapeDtypeStruct((g.ndev, scap), jnp.int32)
         mask = jax.ShapeDtypeStruct((g.ndev, scap), jnp.bool_)
         args = (g, seeds, mask)
-        self._resolve("init", self._make_init, args)
+        self._resolve("init", self._make_init, args, cfg)
         state = jax.eval_shape(lambda gg, s, m: init_wave(gg, s, m), *args)
         n = 1
         for ui in range(self.n_units):
@@ -394,29 +431,66 @@ class StageRunner:
             if not local_only:
                 args = (g, state, self.cache)
                 self._resolve(("fetch", ui),
-                              lambda: self._make_fetch(ui), args)
+                              lambda: self._make_fetch(ui, cfg), args, cfg)
                 state, bufs, _ = jax.eval_shape(
                     lambda gg, s, c: fetch_stage(gg, pd, cfg, exch, ui, s,
                                                  False, c), *args)
                 n += 1
             args = (g, state, bufs)
             self._resolve(("expand", ui, local_only),
-                          lambda: self._make_expand(ui, local_only), args)
+                          lambda: self._make_expand(ui, local_only, cfg),
+                          args, cfg)
             state = jax.eval_shape(
                 lambda gg, s, b: expand_stage(gg, pd, cfg, ui, s, b,
                                               local_only), *args)
             args = (g, state)
             self._resolve(("verify", ui, local_only),
-                          lambda: self._make_verify(ui, local_only), args)
+                          lambda: self._make_verify(ui, local_only, cfg),
+                          args, cfg)
             state = jax.eval_shape(
                 lambda gg, s: verify_stage(gg, pd, cfg, exch, ui, s,
                                            local_only), *args)
             n += 2
         args = (state, np.float32(0.0))
-        self._resolve("finalize", self._make_finalize, args)
+        self._resolve("finalize", self._make_finalize, args, cfg)
         return n + 1
 
-    def prewarm_async(self, scap: int, local_only: bool) -> threading.Thread:
+    def prewarm(self, scap: int, local_only: bool,
+                escalation_rungs: int = 0) -> int:
+        """Resolve the whole stage ladder for seed capacity ``scap`` from
+        abstract values (``jax.eval_shape`` chains the inter-stage shapes;
+        no device work happens beyond compilation itself).  Abstract and
+        concrete dispatches share argument signatures, so a later real
+        wave lands exactly on the slots resolved here.
+
+        ``escalation_rungs > 0`` additionally warms that many capacity
+        rungs *above* the current caps (doubled exactly as ``escalate()``
+        doubles them) — slots are keyed by capacities, so a later
+        escalation finds its stages already resolved and an overflow run
+        never compiles on the critical path.
+
+        Returns the number of stages resolved — 0 when aborted by a
+        concurrent escalation (the ladder being warmed no longer matches
+        the live capacities) or under the spmd/dist backends
+        (ShapeDtypeStruct placeholders carry no mesh sharding, and a
+        Compiled stage rejects calls whose input shardings differ from the
+        ones it was lowered with — sharded stages must be resolved from
+        the live sharded arrays)."""
+        if self.exch.mode in ("spmd", "dist"):
+            return 0
+        gen = self._gen
+        cfg = self.cfg
+        n = self._prewarm_ladder(scap, local_only, cfg, gen)
+        for _ in range(max(0, int(escalation_rungs))):
+            if n == 0 or cfg.frontier_cap >= _MAX_CAP:
+                break
+            cfg = self._escalated(cfg)
+            r = self._prewarm_ladder(scap, local_only, cfg, gen)
+            n = n + r if r else n
+        return n
+
+    def prewarm_async(self, scap: int, local_only: bool,
+                      escalation_rungs: int = 0) -> threading.Thread:
         """Run :meth:`prewarm` on a daemon thread (the driver launches this
         right before each scheduler phase, so compilation overlaps group
         formation).  Join via :meth:`join_prewarm` before reading
@@ -424,7 +498,7 @@ class StageRunner:
         and the main path compiles on demand as before."""
         def work():
             try:
-                self.prewarm(scap, local_only)
+                self.prewarm(scap, local_only, escalation_rungs)
             except Exception as e:
                 warnings.warn(f"stage pre-warm (scap={scap}, local_only="
                               f"{local_only}) failed: {e!r}", RuntimeWarning)

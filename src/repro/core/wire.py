@@ -546,10 +546,10 @@ def resolve_wire_format(requested: str, mode: str, prior: dict | None = None,
       fetch/verify every run);
     * one format measured -> *explore* the other (deterministic, so two
       runs complete the table);
-    * nothing measured -> heuristic: real multi-process transports
-      (``spmd``) default to ``varint`` (wire bytes cost real time), the
-      intra-process reference backends to ``raw`` (their bytes are free,
-      codec compute is not).
+    * nothing measured -> heuristic: transports whose bytes cost real
+      time (``spmd`` collectives, ``dist`` across process boundaries)
+      default to ``varint``, the intra-process reference backends to
+      ``raw`` (their bytes are free, codec compute is not).
 
     Returns ``(format, reason)`` with reason in ``{"explicit", "measured",
     "explore", "heuristic"}`` — the driver reports it as
@@ -569,4 +569,4 @@ def resolve_wire_format(requested: str, mode: str, prior: dict | None = None,
         return best, "measured"
     if len(have) == 1:
         return ("varint" if have[0] == "raw" else "raw"), "explore"
-    return ("varint" if mode == "spmd" else "raw"), "heuristic"
+    return ("varint" if mode in ("spmd", "dist") else "raw"), "heuristic"

@@ -264,14 +264,13 @@ class DeviceGraph:
         return int(sum(x.size * x.dtype.itemsize for x in leaves))
 
     def shard(self, mesh, axis: str = "data") -> "DeviceGraph":
-        """device_put every leaf sharded on its leading ``ndev`` axis."""
-        from jax.sharding import NamedSharding, PartitionSpec as P
+        """Every leaf sharded on its leading ``ndev`` axis — through
+        :func:`repro.compat.global_shard`, so a process-spanning mesh
+        (the ``dist`` backend) assembles global arrays from per-process
+        blocks while a local mesh stays a plain ``device_put``."""
+        from repro import compat
 
-        def put(x):
-            spec = P(axis, *([None] * (x.ndim - 1)))
-            return jax.device_put(x, NamedSharding(mesh, spec))
-
-        return jax.tree_util.tree_map(put, self)
+        return compat.global_shard(self, mesh, axis)
 
 
 _DEVICE_FORMATS: dict[str, type[DeviceGraph]] = {}

@@ -166,14 +166,20 @@ def stage_context(stage_key, cfg, exch_mode: str, plan_repr: str) -> tuple:
     a field belongs here (a spurious miss costs one compile, a spurious
     hit costs correctness)."""
     kind = stage_key if isinstance(stage_key, str) else stage_key[0]
+    # the comm-pipelining knobs change the exchange program structure
+    # (chunked vs single-shot a2a), so every stage with a collective
+    # keys on them; getattr guards configs predating the knobs
+    comm = (bool(getattr(cfg, "comm_pipeline", False)),
+            int(getattr(cfg, "comm_chunks", 1)))
     if kind == "fetch":
         knobs = (cfg.fetch_cap, cfg.wire_format, cfg.use_pallas_kernels,
                  cfg.enable_cache, cfg.cache_slots, cfg.cache_ways,
-                 cfg.cache_decay)
+                 cfg.cache_decay) + comm
     elif kind == "expand":
         knobs = (cfg.frontier_cap, cfg.use_pallas_kernels)
     elif kind == "verify":
-        knobs = (cfg.verify_cap, cfg.wire_format, cfg.use_pallas_kernels)
+        knobs = (cfg.verify_cap, cfg.wire_format,
+                 cfg.use_pallas_kernels) + comm
     else:                      # init / finalize: pure shape transformers
         knobs = ()
     return (repr(stage_key), plan_repr, exch_mode, kind, knobs)
@@ -184,16 +190,24 @@ class StageExecCache:
     """Per-host on-disk store of serialized stage executables.
 
     ``stats`` counts ``hits`` (entry loaded — memo or disk), ``misses``
-    (no entry), ``stores`` (fresh executables persisted), and ``errors``
+    (no entry), ``stores`` (fresh executables persisted), ``errors``
     (corrupt/stale/unserializable entries that degraded to a miss or a
-    skipped store).  The store is inert — ``enabled`` False — when the
-    JAX build cannot serialize executables; callers need no special
-    casing, every ``load`` just misses and every ``store`` no-ops.
+    skipped store), and ``evictions`` (LRU garbage collection).  The
+    store is inert — ``enabled`` False — when the JAX build cannot
+    serialize executables; callers need no special casing, every ``load``
+    just misses and every ``store`` no-ops.
+
+    ``budget_bytes > 0`` bounds the on-disk size: after every store the
+    least-recently-used ``.stagex`` envelopes (file mtime — refreshed on
+    every disk *load* too, so a hot entry never looks cold) are evicted
+    until the directory fits the budget.  Entries otherwise accrete per
+    (pattern, caps, format) forever.  ``0`` keeps the store unbounded.
     """
 
     path: str
+    budget_bytes: int = 0
     stats: dict = field(default_factory=lambda: dict(
-        hits=0, misses=0, stores=0, errors=0))
+        hits=0, misses=0, stores=0, errors=0, evictions=0))
 
     def __post_init__(self):
         self.path = os.path.abspath(self.path)
@@ -253,6 +267,10 @@ class StageExecCache:
             except OSError:
                 pass
             return None
+        try:
+            os.utime(fname, None)   # LRU touch: a disk hit is recent use
+        except OSError:
+            pass
         _LOADED_MEMO[memo_key] = fn
         self.stats["hits"] += 1
         return fn
@@ -287,9 +305,44 @@ class StageExecCache:
                 pass
             return False
         self.stats["stores"] += 1
+        self._gc()
         return True
 
     # -- maintenance -------------------------------------------------------- #
+    def _gc(self) -> int:
+        """Evict least-recently-used envelopes until the store fits
+        ``budget_bytes``.  The just-stored entry has the freshest mtime,
+        so it is evicted last — a budget smaller than one envelope
+        degrades to "keep only the newest".  Concurrent runs may race on
+        removals; a vanished file is simply already-evicted."""
+        if not self.enabled or self.budget_bytes <= 0:
+            return 0
+        try:
+            files = [os.path.join(self.path, f)
+                     for f in os.listdir(self.path) if f.endswith(_SUFFIX)]
+            stats = []
+            for f in files:
+                try:
+                    st = os.stat(f)
+                    stats.append((st.st_mtime, st.st_size, f))
+                except OSError:
+                    continue
+        except OSError:
+            return 0
+        total = sum(s for _, s, _ in stats)
+        evicted = 0
+        for mtime, size, fname in sorted(stats):   # oldest first
+            if total <= self.budget_bytes:
+                break
+            try:
+                os.remove(fname)
+            except OSError:
+                continue
+            total -= size
+            evicted += 1
+        self.stats["evictions"] += evicted
+        return evicted
+
     @staticmethod
     def clear_memory_memo() -> None:
         """Drop the in-process loaded-executable memo (tests use this to
@@ -308,4 +361,6 @@ def build_exec_cache(cfg) -> StageExecCache | None:
     """The store ``EngineConfig`` asks for (``None`` = disabled)."""
     if not getattr(cfg, "compile_cache_dir", ""):
         return None
-    return StageExecCache(cfg.compile_cache_dir)
+    return StageExecCache(
+        cfg.compile_cache_dir,
+        budget_bytes=int(getattr(cfg, "compile_cache_budget_bytes", 0)))

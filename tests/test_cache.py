@@ -58,6 +58,21 @@ def test_config_validates_cache_knobs():
         EngineConfig(cache_decay=-1)
 
 
+def test_config_validates_comm_and_budget_knobs():
+    EngineConfig(comm_pipeline=True, comm_chunks=8)       # fine
+    EngineConfig(compile_cache_budget_bytes=1 << 30)      # fine
+    with pytest.raises(ValueError, match="comm_pipeline"):
+        EngineConfig(comm_pipeline=1)
+    with pytest.raises(ValueError, match="comm_chunks"):
+        EngineConfig(comm_chunks=0)
+    with pytest.raises(ValueError, match="comm_chunks"):
+        EngineConfig(comm_chunks=3)
+    with pytest.raises(ValueError, match="compile_cache_budget_bytes"):
+        EngineConfig(compile_cache_budget_bytes=-1)
+    with pytest.raises(ValueError, match="compile_cache_budget_bytes"):
+        EngineConfig(compile_cache_budget_bytes=True)
+
+
 # --------------------------------------------------------------------------- #
 # Unit level: probe / admission bookkeeping
 # --------------------------------------------------------------------------- #

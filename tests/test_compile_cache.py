@@ -4,6 +4,7 @@ key-layer mismatch forces recompilation (never a wrong-executable hit),
 and corrupt/stale store files degrade to a warning + tracing fallback
 instead of a crash."""
 import dataclasses
+import os
 import pickle
 
 import jax
@@ -80,7 +81,8 @@ def test_key_mismatch_forces_recompile(tmp_path):
     # a digest never stored is a plain miss, not an error
     ctx = stage_context(("fetch", 0), cfg, "sim", "planA")
     assert cache.load(base, sig, ctx) is None
-    assert cache.stats == dict(hits=0, misses=1, stores=0, errors=0)
+    assert cache.stats == dict(hits=0, misses=1, stores=0, errors=0,
+                               evictions=0)
 
 
 def test_corrupt_file_warns_and_falls_back(tmp_path):
@@ -117,6 +119,53 @@ def test_build_exec_cache_gating(tmp_path):
         compile_cache_dir=str(tmp_path / "execs")))
     assert isinstance(c, StageExecCache) and c.enabled
     assert c.entries() == []
+    assert c.budget_bytes == 0               # unbounded by default
+    b = build_exec_cache(EngineConfig(
+        compile_cache_dir=str(tmp_path / "execs2"),
+        compile_cache_budget_bytes=1 << 20))
+    assert b.budget_bytes == 1 << 20
+
+
+def test_budget_gc_evicts_oldest(tmp_path):
+    """LRU garbage collection: with a byte budget fitting only two of three
+    envelopes, the oldest-mtime entry is evicted and the survivors load."""
+    cache = StageExecCache(str(tmp_path))    # unbounded while seeding
+    entries = []
+    for fc in (1 << 8, 1 << 9, 1 << 10):     # distinct caps -> digests
+        cfg = EngineConfig(fetch_cap=fc)
+        entries.append(_store_one(cache, cfg=cfg))
+    files = [cache._file(d) for d, _, _, _ in entries]
+    sizes = [os.path.getsize(f) for f in files]
+    for i, f in enumerate(files):            # deterministic LRU order
+        os.utime(f, (1000 + i, 1000 + i))
+    cache.budget_bytes = sizes[1] + sizes[2]
+    assert cache._gc() == 1
+    assert cache.stats["evictions"] == 1
+    assert not os.path.exists(files[0])
+    assert os.path.exists(files[1]) and os.path.exists(files[2])
+    StageExecCache.clear_memory_memo()
+    d1, sig1, ctx1, _ = entries[1]
+    assert cache.load(d1, sig1, ctx1) is not None   # survivor still loads
+    d0, sig0, ctx0, _ = entries[0]
+    assert cache.load(d0, sig0, ctx0) is None       # evicted -> plain miss
+
+
+def test_store_triggers_gc_and_disk_hit_refreshes_lru(tmp_path):
+    """A store over budget immediately evicts the LRU entry, and a disk
+    *load* refreshes an entry's mtime so hot entries never look cold."""
+    cache = StageExecCache(str(tmp_path))
+    d0, sig0, ctx0, _ = _store_one(cache, cfg=EngineConfig())
+    f0 = cache._file(d0)
+    os.utime(f0, (1000, 1000))
+    # a disk hit must bump the mtime (the LRU touch)
+    StageExecCache.clear_memory_memo()
+    assert cache.load(d0, sig0, ctx0) is not None
+    assert os.path.getmtime(f0) > 1000
+    os.utime(f0, (1000, 1000))               # age it again, then overflow
+    cache.budget_bytes = os.path.getsize(f0) + 16
+    d1, *_ = _store_one(cache, cfg=EngineConfig(fetch_cap=1 << 9))
+    assert cache.entries() == sorted([d1])   # d0 evicted by the store's gc
+    assert cache.stats["evictions"] == 1
 
 
 def test_prewarm_signature_matches_concrete():

@@ -105,11 +105,49 @@ def test_unique_pairs_all_masked():
 
 
 def test_exchange_registry_and_unknown_mode():
-    assert {"sim", "spmd", "gather"} <= set(exchange_backends())
+    assert {"sim", "spmd", "gather", "dist"} <= set(exchange_backends())
     with pytest.raises(ValueError, match="unknown exchange mode"):
         Exchange("no-such-backend")
     with pytest.raises(ValueError, match="needs a mesh"):
         Exchange("spmd")
+    with pytest.raises(ValueError, match="needs a mesh"):
+        Exchange("dist")
+    with pytest.raises(ValueError, match="comm_chunks"):
+        Exchange("sim", comm_chunks=0)
+
+
+def test_comm_chunked_a2a_bit_identical():
+    """comm_chunks > 1 splits the exchange along the per-peer capacity axis
+    (axis 2) into back-to-back sub-exchanges; the concatenated result must
+    be bit-identical to the one-shot transpose, and shapes that cannot be
+    split evenly (or 2-D length matrices) fall back to one shot."""
+    x = jnp.arange(4 * 4 * 8 * 3, dtype=jnp.int32).reshape(4, 4, 8, 3)
+    base = Exchange("sim").a2a(x)
+    for mode in ("sim", "gather"):
+        for c in (2, 4, 8):
+            assert jnp.array_equal(Exchange(mode, comm_chunks=c).a2a(x),
+                                   base)
+    chunky = Exchange("sim", comm_chunks=4)
+    y = jnp.arange(4 * 4 * 7, dtype=jnp.int32).reshape(4, 4, 7)
+    assert jnp.array_equal(chunky.a2a(y), Exchange("sim").a2a(y))
+    m = jnp.arange(16.0).reshape(4, 4)
+    assert jnp.array_equal(chunky.a2a(m), Exchange("sim").a2a(m))
+    # involution survives chunking
+    assert jnp.array_equal(chunky.a2a(chunky.a2a(x)), x)
+
+
+def test_per_dev_sent_bytes_sums_to_scalar_accounting():
+    """Row sums of the diagonal-masked byte matrix: summing the per-device
+    vector recovers off_device_payload_bytes exactly (the invariant the
+    scalability harness's skew gates rely on)."""
+    bm = jnp.array([[5., 2., 1.], [3., 7., 0.], [4., 4., 4.]]) * 9.0
+    for mode in ("sim", "gather"):
+        ex = Exchange(mode)
+        dev = ex.per_dev_sent_bytes(bm)
+        assert dev.shape == (3,)
+        assert dev.dtype == jnp.float32
+        assert float(dev.sum()) == float(ex.off_device_payload_bytes(bm))
+        assert [float(v) for v in dev] == [27.0, 27.0, 72.0]
 
 
 def test_register_custom_backend():

@@ -154,6 +154,62 @@ def test_spmd_wire_varint_matches_sim():
 
 
 @pytest.mark.slow
+@pytest.mark.parametrize("wire,cache", [("raw", False), ("raw", True),
+                                        ("varint", False),
+                                        ("varint", True)])
+def test_dist_two_process_matches_sim(wire, cache):
+    """The ``dist`` backend across two real OS processes (jax.distributed +
+    gloo CPU collectives) is byte-identical to the in-process ``sim``
+    backend on the same partitioned graph: counts, ``bytes_wire_*`` scalar
+    totals, per-device attribution sums, and cache hit accounting.  Skips
+    cleanly when the jaxlib build cannot bootstrap multi-process CPU."""
+    import dataclasses
+
+    from repro.configs.rads import QUERIES
+    from repro.core import Pattern, rads_enumerate
+    from repro.graph import load_dataset, partition
+    from repro.launch.dist_worker import (build_argparser, dist_available,
+                                          launch_local, worker_config)
+
+    if not dist_available():
+        pytest.skip("jaxlib lacks gloo CPU collectives")
+    wargs = ["--dataset", "dblp_bench", "--query", "q1",
+             "--partition", "hash", "--wire", wire,
+             "--frontier-cap", str(1 << 12), "--fetch-cap", str(1 << 9),
+             "--verify-cap", str(1 << 11), "--region-budget", str(1 << 11)]
+    if not cache:
+        wargs.append("--no-cache")
+    workers = launch_local(2, wargs, timeout_s=900.0)
+    if workers is None:
+        pytest.skip("multi-process bootstrap unavailable at runtime")
+    assert len(workers) == 2
+
+    cfg = worker_config(build_argparser().parse_args(wargs))
+    if cfg.pipeline_depth == "auto":
+        cfg = dataclasses.replace(cfg, pipeline_depth=2)
+    pg = partition(load_dataset("dblp_bench"), 2, method="hash")
+    sim = rads_enumerate(pg, Pattern.from_edges(QUERIES["q1"]), cfg,
+                         mode="sim", return_embeddings=False)
+    assert sim.count > 0
+    for w in workers:
+        st = w["stats"]
+        assert int(w["count"]) == sim.count
+        for phase in ("fetch", "verify"):
+            assert (float(st[f"bytes_wire_{phase}"])
+                    == float(sim.stats[f"bytes_wire_{phase}"]))
+            # per-device attribution is complete: rows sum to the total
+            assert (float(sum(st[f"bytes_wire_{phase}_dev"]))
+                    == float(sim.stats[f"bytes_wire_{phase}"]))
+        assert float(st["bytes_fetch"]) == float(sim.stats["bytes_fetch"])
+        assert float(st["cache_hits"]) == float(sim.stats["cache_hits"])
+        if cache:
+            assert (float(st["bytes_fetch"])
+                    + float(st["bytes_saved_cache"])
+                    == float(sim.stats["bytes_fetch"])
+                    + float(sim.stats["bytes_saved_cache"]))
+
+
+@pytest.mark.slow
 def test_sharded_train_matches_single_device():
     res = run_sub(textwrap.dedent("""
         import json, jax, jax.numpy as jnp, numpy as np

@@ -161,7 +161,39 @@ def test_warm_run_zero_compiles(erdos, tmp_path):
     assert warm.stats["exec_cache"]["misses"] == 0
 
 
-def test_pallas_membership_engine_matches_oracle():
+def test_prewarm_escalation_rung_precompiles_next_caps():
+    """``prewarm(escalation_rungs=1)`` resolves the stage ladder one
+    capacity rung *above* the live caps; a subsequent ``escalate()`` then
+    finds every stage already in the slot table (zero new compiles on the
+    escalation path), and the old rung's slots survive for in-flight
+    waves."""
+    g = erdos_graph(80, 4.0, seed=2)
+    pg = partition(g, 2, method="bfs")
+    pat = Pattern.from_edges(QUERIES["q1"])
+    pd = build_plan_data(best_plan(pat))
+    cfg = EngineConfig(frontier_cap=1 << 8, fetch_cap=64, verify_cap=128,
+                       region_group_budget=256)
+    runner = StageRunner(device_graph(pg, "dense"), pd, cfg, Exchange("sim"))
+
+    n0 = runner.prewarm(scap=16, local_only=False)
+    assert n0 > 0
+    base_key = (cfg.frontier_cap, cfg.fetch_cap, cfg.verify_cap)
+    assert base_key in {k[1] for k in runner._slots if k[1]}
+
+    n1 = runner.prewarm(scap=16, local_only=False, escalation_rungs=1)
+    assert n1 > n0                  # base rung re-walked + one rung above
+    esc = runner._escalated(cfg)
+    esc_key = (esc.frontier_cap, esc.fetch_cap, esc.verify_cap)
+    assert esc_key in {k[1] for k in runner._slots if k[1]}
+
+    compiles_before = runner.compiles
+    assert runner.escalate()
+    # the slot table survives escalation: both rungs still resolvable
+    keys = {k[1] for k in runner._slots if k[1]}
+    assert base_key in keys and esc_key in keys
+    # re-warming the escalated rung is pure slot hits — no new compiles
+    assert runner.prewarm(scap=16, local_only=False) > 0
+    assert runner.compiles == compiles_before
     """use_pallas_kernels routes the back-edge / verifyE membership tests
     through the Pallas kernel (interpret mode on CPU) — results must not
     change."""
