@@ -45,6 +45,9 @@ collect-check:
 ## on any count, if a varint row's actual wire bytes are not below raw, or
 ## if the actual coded fetch bytes exceed the modeled
 ## bytes_fetch_compressed baseline by more than 5%.
+## Also writes trace_smoke.json (a Perfetto-loadable wave timeline of one
+## warm run) and gates it on Chrome schema validity, paired
+## dispatch->retire flow arrows, and >= 4 named track types.
 ## cross-process scalability smoke: dist backend at 1/2/4 OS processes on
 ## the bfs-partitioned powerlaw cell, gated on (a) per-process wire-byte
 ## sums equaling the in-process sim totals byte-for-byte, (b) dist counts
@@ -126,3 +129,20 @@ bench-smoke:
 	% (len(d['results']), adj.get('dense', -1), adj.get('bucketed', -1), \
 	hit, whit, sav, 100 * wcut, wcold, wwarm, \
 	t['sync_us'], t['async_us'], t['async_leq_sync']))"
+	@$(PY) -c "import json; \
+	doc=json.load(open('trace_smoke.json')); \
+	evs=doc['traceEvents']; \
+	assert evs, 'empty trace'; \
+	bad=[e for e in evs \
+	     if not {'name', 'ph', 'ts', 'pid', 'tid'} <= set(e)]; \
+	assert not bad, 'events missing ph/ts/pid/tid: %r' % bad[:3]; \
+	s={e['id'] for e in evs if e['ph'] == 's'}; \
+	f={e['id'] for e in evs if e['ph'] == 'f'}; \
+	assert s and s == f, 'dispatch->retire flow arrows unpaired: %r' \
+	% sorted(s ^ f); \
+	tracks={e['tid'] for e in evs \
+	        if e['ph'] == 'M' and e['name'] == 'thread_name'}; \
+	assert len(tracks) >= 4, 'fewer than 4 named track types: %r' % tracks; \
+	print('trace-smoke: %d events, %d waves flow-paired, %d named tracks, ' \
+	'%d dropped' % (len(evs), len(s), len(tracks), \
+	doc['otherData']['dropped_records']))"

@@ -359,6 +359,33 @@ def run(datasets=("dblp_bench", "roadnet_bench", "livejournal_bench",
         async_us=sum(c["async_us"] for c in out["sync_vs_async"]))
     totals["async_leq_sync"] = totals["async_us"] <= totals["sync_us"]
     out["sync_vs_async_total"] = totals
+
+    # ---- traced smoke run: the Perfetto timeline artifact CI ships -------- #
+    # one full wave-level trace per smoke invocation (warm stages via the
+    # shared runner cache, so the timeline shows steady-state execution);
+    # the Makefile gate validates the Chrome schema and flow pairing
+    if smoke:
+        from repro.obs import TraceRecorder
+
+        tracer = TraceRecorder()
+        g = load_dataset("dblp_bench")
+        pg = partition(g, ndev, method="bfs")
+        pat = Pattern.from_edges(QUERIES["q1"])
+        rt = rads_enumerate(pg, pat,
+                            dataclasses.replace(CFG,
+                                                compile_cache_dir=exec_dir),
+                            mode="sim", return_embeddings=False,
+                            runner_cache=shared_cache, tracer=tracer)
+        trace_path = tracer.save("trace_smoke.json")
+        out["trace_smoke"] = dict(
+            path=trace_path, count=int(rt.count),
+            events=int(tracer.n_recorded), dropped=int(tracer.n_dropped),
+            wall_us=float(rt.stats["wall_us"]),
+            sme_wall_us=float(rt.stats["sme_wall_us"]),
+            dist_wall_us=float(rt.stats["dist_wall_us"]))
+        emit("enum_trace_smoke", float(rt.stats["wall_us"]),
+             f"path={trace_path};events={tracer.n_recorded};"
+             f"dropped={tracer.n_dropped};count={rt.count}")
     with open(json_path, "w") as f:
         json.dump(out, f, indent=1)
     emit("enum_json", 0.0, f"path={json_path}")

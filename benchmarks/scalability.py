@@ -16,6 +16,10 @@ after the artifact is written:
 
 Wall-clock on this container is oversubscribed-CPU simulation, so the
 wall curve is descriptive; the byte curves are the scalable quantities.
+The ``wall_skew`` column (max over mean of the per-process engine-span
+``wall_us``, from :func:`repro.core.driver.merge_process_stats`) factors
+subprocess startup out of that noise: it is the honest straggler signal
+per N even when absolute wall is not comparable across N.
 When the jaxlib build lacks gloo CPU collectives the dist columns degrade
 to ``null`` and the gates are skipped — the artifact still records the
 sim-side curves so downstream tooling always has the file.
@@ -108,7 +112,7 @@ def run(dataset="dblp_bench", queries=("q1", "q2"), ndevs=NDEVS,
         wargs = _worker_args(dataset, q, wire)
         curve = dict(count=None, wall_s=[], wall_s_mean=[], sim_wall_s=[],
                      bytes_wire_total=[], bytes_wire_max_dev=[],
-                     comm_skew=[], parity=[])
+                     comm_skew=[], wall_skew=[], parity=[])
         for nd in ndevs:
             sim_res, sim_wall = _sim_reference(g, pat, nd, wargs)
             curve["count"] = int(sim_res.count)
@@ -119,7 +123,8 @@ def run(dataset="dblp_bench", queries=("q1", "q2"), ndevs=NDEVS,
                 have_dist = False
                 doc["dist_available"] = False
                 for k in ("wall_s", "wall_s_mean", "bytes_wire_total",
-                          "bytes_wire_max_dev", "comm_skew", "parity"):
+                          "bytes_wire_max_dev", "comm_skew", "wall_skew",
+                          "parity"):
                     curve[k].append(None)
                 emit(f"scale/{dataset}/{q}/ndev{nd}", sim_wall * 1e6,
                      f"count={sim_res.count};dist=unavailable")
@@ -132,7 +137,7 @@ def run(dataset="dblp_bench", queries=("q1", "q2"), ndevs=NDEVS,
             doc["gate_failures"].extend(f"{q}/ndev{nd}: {f}" for f in fails)
             if merged is None:
                 for k in ("wall_s", "wall_s_mean", "bytes_wire_total",
-                          "bytes_wire_max_dev", "comm_skew"):
+                          "bytes_wire_max_dev", "comm_skew", "wall_skew"):
                     curve[k].append(None)
                 curve["parity"].append(False)
                 continue
@@ -145,11 +150,18 @@ def run(dataset="dblp_bench", queries=("q1", "q2"), ndevs=NDEVS,
             curve["bytes_wire_max_dev"].append(
                 float(merged["bytes_wire_max_dev"]))
             curve["comm_skew"].append(float(merged["comm_skew"]))
+            # engine-clock honesty columns: per-process wall from the span
+            # clock inside rads_enumerate (subprocess startup excluded),
+            # max-merged + skew by merge_process_stats — the straggler
+            # signal the wall_s subprocess timing can't separate out
+            curve["wall_skew"].append(round(float(merged["wall_skew"]), 4))
             curve["parity"].append(not fails)
             emit(f"scale/{dataset}/{q}/ndev{nd}", max(walls) * 1e6,
                  f"count={workers[0]['count']};wire_bytes={total:.0f};"
                  f"max_dev={merged['bytes_wire_max_dev']:.0f};"
                  f"skew={merged['comm_skew']:.3f};"
+                 f"wall_skew={merged['wall_skew']:.3f};"
+                 f"engine_wall_us={merged['wall_us']:.0f};"
                  f"parity={'ok' if not fails else 'FAIL'}")
         # the scalability claim: per-process traffic shrinks as N grows
         maxdev = [m for nd, m in zip(ndevs, curve["bytes_wire_max_dev"])

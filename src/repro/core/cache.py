@@ -128,6 +128,14 @@ class AdjCache:
         leaves = jax.tree_util.tree_leaves(self)
         return int(sum(x.size * x.dtype.itemsize for x in leaves))
 
+    def register_metrics(self, reg) -> None:
+        """Set the cache-owned instruments on a stats registry (declared in
+        :mod:`repro.obs.schema`) — presence and footprint; the per-wave
+        ``cache_hits``/``cache_probes``/``bytes_saved_cache`` counters flow
+        through ``WaveState`` -> ``finalize_wave`` as before."""
+        reg["cache_enabled"] = True
+        reg["cache_bytes"] = int(self.cache_bytes)
+
     def shard(self, mesh, axis: str = "data") -> "AdjCache":
         """Every leaf sharded on its leading ``ndev`` axis — through
         :func:`repro.compat.global_shard` so a process-spanning mesh (the

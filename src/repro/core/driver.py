@@ -39,8 +39,9 @@ from repro.core.priors import (HIST_BINS, hist_percentile, hist_update,
 from repro.core.query import Pattern
 from repro.core.region import iter_region_groups
 from repro.core.scheduler import GroupQueue, PipelineScheduler, StageRunner
-from repro.core.wire import resolve_wire_format
+from repro.core.wire import register_wire_metrics, resolve_wire_format
 from repro.graph.storage import PartitionedGraph, device_graph
+from repro.obs import NULL_TRACER, build_driver_registry
 
 
 @dataclass
@@ -48,6 +49,9 @@ class EnumerationResult:
     count: int
     embeddings: set[tuple[int, ...]] | None
     stats: dict = field(default_factory=dict)
+    # the typed MetricsRegistry behind ``stats`` (same values; carries
+    # kind/unit/description and the JSON / Prometheus exporters)
+    registry: object = None
 
 
 def extract_embeddings(rows: np.ndarray, alive: np.ndarray, pd: PlanData,
@@ -67,7 +71,8 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
                    mode: str = "sim", mesh=None,
                    plan: Plan | None = None,
                    return_embeddings: bool = True,
-                   runner_cache: dict | None = None) -> EnumerationResult:
+                   runner_cache: dict | None = None,
+                   tracer=None) -> EnumerationResult:
     """``mode`` selects a registered exchange backend: 'sim' (reference),
     'gather' (device-local, meshless), 'spmd' (sharded production path —
     requires ``mesh``), 'dist' (spmd across ``jax.distributed`` processes —
@@ -81,7 +86,13 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
     from the cache, so only the first call pays stage compilation —
     benchmarks use this to split ``compile_us`` from steady-state
     ``wall_us``.
+
+    ``tracer``: optional :class:`repro.obs.trace.TraceRecorder` — wave /
+    stage / prewarm / scheduler spans land in it for Chrome-trace export;
+    the default :data:`~repro.obs.trace.NULL_TRACER` records nothing and
+    adds zero instruments to the wave loop.
     """
+    tracer = tracer if tracer is not None else NULL_TRACER
     explicit_plan = plan
     plan = plan or best_plan(pattern, cfg.plan_rho)
     pd = build_plan_data(plan)
@@ -132,9 +143,10 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
                                       comm_chunks=(cfg.comm_chunks
                                                    if cfg.comm_pipeline
                                                    else 1)),
-                             cache=adj_cache)
+                             cache=adj_cache, tracer=tracer)
         if ck is not None:
             runner_cache[ck] = (pg, explicit_plan, runner)
+    runner.tracer = tracer     # cached runners adopt this call's recorder
     # compile accounting is reported as THIS call's delta (runner_cache
     # reuses runners across calls, so the counters are cumulative)
     compiles0, compile_s0 = runner.compiles, runner.compile_s
@@ -156,35 +168,39 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
         sme_seeds.append(gids[is_sme])
         dist_seeds_all.extend(map(int, gids[~is_sme]))
 
-    stats = dict(n_sme_seeds=int(sum(len(s) for s in sme_seeds)),
-                 n_dist_seeds=len(dist_seeds_all),
-                 bytes_fetch=0.0, bytes_verify=0.0, n_groups=0,
-                 bytes_wire_fetch=0.0, bytes_wire_verify=0.0,
-                 bytes_wire_fetch_dev=np.zeros(ndev),
-                 bytes_wire_verify_dev=np.zeros(ndev),
-                 process_index=compat.process_index(),
-                 process_count=compat.process_count(),
-                 comm_pipeline=bool(cfg.comm_pipeline),
-                 comm_chunks=(cfg.comm_chunks if cfg.comm_pipeline else 1),
-                 wire_format=cfg.wire_format,
-                 wire_format_requested=requested_wire,
-                 wire_auto_reason=wire_reason,
-                 bytes_fetch_compressed=0.0, bytes_saved_cache=0.0,
-                 cache_hits=0.0, cache_probes=0.0,
-                 compile_cache_hits=0.0, compiles=0, compile_s=0.0,
-                 exec_cache_enabled=bool(runner.exec_cache is not None
-                                         and runner.exec_cache.enabled),
-                 cache_enabled=bool(runner.cache is not None),
-                 cache_bytes=int(runner.cache.cache_bytes)
-                 if runner.cache is not None else 0,
-                 overflow_retries=0, cap_escalations=0,
-                 plan_rounds=plan.n_rounds,
-                 sme_count=0, dist_count=0,
-                 n_waves=0, max_inflight_waves=0, steal_events=0,
-                 wave_s_total=0.0, pipeline_depth=cfg.pipeline_depth,
-                 storage_format=cfg.storage_format,
-                 peak_adj_bytes=int(runner.g.adj_bytes),
-                 priors_preloaded=bool(prior))
+    # the run's stats object is the typed registry declared in
+    # repro.obs.schema — a MutableMapping, so every accumulation below and
+    # in the scheduler works exactly as on the plain dict it replaces
+    stats = build_driver_registry()
+    stats["n_sme_seeds"] = int(sum(len(s) for s in sme_seeds))
+    stats["n_dist_seeds"] = len(dist_seeds_all)
+    for k in ("bytes_fetch", "bytes_verify", "bytes_wire_fetch",
+              "bytes_wire_verify", "bytes_saved_cache", "cache_hits",
+              "cache_probes", "compile_cache_hits", "compile_s",
+              "wave_s_total", "sme_wall_us", "dist_wall_us"):
+        stats[k] = 0.0
+    for k in ("n_groups", "overflow_retries", "cap_escalations",
+              "sme_count", "dist_count", "n_waves", "max_inflight_waves",
+              "steal_events", "compiles"):
+        stats[k] = 0
+    stats["bytes_wire_fetch_dev"] = np.zeros(ndev)
+    stats["bytes_wire_verify_dev"] = np.zeros(ndev)
+    # subsystems set the instruments they own (declared in the schema)
+    runner.exch.register_metrics(stats, comm_pipeline=cfg.comm_pipeline)
+    register_wire_metrics(stats, cfg.wire_format, requested_wire,
+                          wire_reason)
+    if runner.cache is not None:
+        runner.cache.register_metrics(stats)
+    else:
+        stats["cache_enabled"] = False
+        stats["cache_bytes"] = 0
+    stats["exec_cache_enabled"] = bool(runner.exec_cache is not None
+                                       and runner.exec_cache.enabled)
+    stats["plan_rounds"] = plan.n_rounds
+    stats["pipeline_depth"] = cfg.pipeline_depth
+    stats["storage_format"] = cfg.storage_format
+    stats["peak_adj_bytes"] = int(runner.g.adj_bytes)
+    stats["priors_preloaded"] = bool(prior)
     total = 0
     embs: set[tuple[int, ...]] = set()
     node_hist = np.zeros(HIST_BINS, dtype=np.int64)
@@ -291,6 +307,10 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
     # drain store hits banked by prewarm-only resolutions (waves that ran
     # already consumed theirs through finalize_wave's exec_hits argument)
     runner.join_prewarm()
+    # total span-clock wall across phases — per-process honest under dist
+    # (merge_process_stats max-merges it and derives wall_skew)
+    stats["wall_us"] = (stats.get("sme_wall_us", 0.0)
+                        + stats.get("dist_wall_us", 0.0))
     stats["compile_cache_hits"] += runner.take_hits()
     stats["compiles"] = runner.compiles - compiles0
     stats["compile_s"] = runner.compile_s - compile_s0
@@ -343,7 +363,7 @@ def rads_enumerate(pg: PartitionedGraph, pattern: Pattern,
         save_priors(cfg.priors_path, pkey, entry)
     return EnumerationResult(count=total,
                              embeddings=embs if return_embeddings else None,
-                             stats=stats)
+                             stats=stats.to_stats(), registry=stats)
 
 
 # logical stats every process must agree on byte-for-byte under dist (the
@@ -357,7 +377,8 @@ _MERGE_EQUAL_KEYS = (
     "dist_count", "overflow_retries", "cap_escalations", "wire_format")
 # host-local wall/compile timings: the run is as slow as its slowest process
 _MERGE_MAX_KEYS = ("wave_s_total", "compile_s", "sme_pipeline_s",
-                   "dist_pipeline_s")
+                   "dist_pipeline_s", "sme_wall_us", "dist_wall_us",
+                   "wall_us")
 
 
 def merge_process_stats(per_proc_stats: list[dict]) -> dict:
@@ -393,4 +414,11 @@ def merge_process_stats(per_proc_stats: list[dict]) -> dict:
     merged["process_count"] = len(per_proc_stats)
     merged["per_process_wall_s"] = [
         float(st.get("wave_s_total", 0.0)) for st in per_proc_stats]
+    # honest dist wall clock: each process's span-clock phase wall survives
+    # the merge individually, and wall_skew (max/mean, like comm_skew for
+    # bytes) is the load-balance signal the scalability bench plots
+    walls = [float(st.get("wall_us", 0.0)) for st in per_proc_stats]
+    merged["per_process_wall_us"] = walls
+    mean_wall = sum(walls) / len(walls)
+    merged["wall_skew"] = (max(walls) / mean_wall if mean_wall > 0 else 1.0)
     return merged

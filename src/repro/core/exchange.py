@@ -168,6 +168,19 @@ class ExchangeBackend:
         off = byte_matrix * (1 - jnp.eye(ndev, dtype=byte_matrix.dtype))
         return off.sum().astype(jnp.float32)
 
+    def register_metrics(self, reg, comm_pipeline: bool | None = None
+                         ) -> None:
+        """Set the exchange-owned instruments on a stats registry (declared
+        in :mod:`repro.obs.schema`): process topology + comm-pipelining
+        knobs.  The backend owns these keys — the driver hands its registry
+        over instead of poking them blind.  ``comm_pipeline`` defaults to
+        whether chunking is actually active."""
+        reg["process_index"] = compat.process_index()
+        reg["process_count"] = compat.process_count()
+        reg["comm_pipeline"] = (self.comm_chunks > 1 if comm_pipeline is None
+                                else bool(comm_pipeline))
+        reg["comm_chunks"] = self.comm_chunks
+
     def per_dev_sent_bytes(self, byte_matrix: jnp.ndarray) -> jnp.ndarray:
         """Per-device off-device *sent* bytes: row sums of a per-peer byte
         matrix (``byte_matrix[t, p]`` = payload bytes ``t`` sends to ``p``)

@@ -47,6 +47,12 @@ driver's ``run_batches``:
   the region-group budget of the distributed phase;
 * **per-wave timing / byte stats** so benchmarks can report overlap
   efficiency (``wave_s_total`` vs ``*_pipeline_s`` wall time);
+* **wave-level tracing** (:mod:`repro.obs`): with a
+  :class:`~repro.obs.trace.TraceRecorder` injected, every admission /
+  stage dispatch / finalize / retire records a span on a per-wave lane
+  with a dispatch->retire flow arrow, and steals / splits / escalations
+  become instants — all guarded by ``tracer.enabled`` so the default
+  (:data:`~repro.obs.trace.NULL_TRACER`) path runs zero instrumentation;
 * **adaptive pipeline depth** (``EngineConfig.pipeline_depth="auto"``):
   the achieved concurrency ``Σ wave latency / wall`` steers the in-flight
   limit up when the pipeline saturates and back down when waves stop
@@ -72,6 +78,8 @@ from repro.core.engine import (PlanData, WaveState, expand_stage,
                                verify_stage)
 from repro.core.exchange import ExchangeBackend
 from repro.graph.storage import DeviceGraph
+from repro.obs.trace import (NULL_TRACER, TRACK_PREWARM, TRACK_RETIRE,
+                             TRACK_SCHED, TRACK_WAVE0, now_us)
 from repro.runtime.compile_cache import (arg_signature, build_exec_cache,
                                          stage_context)
 
@@ -198,10 +206,11 @@ class StageRunner:
     def __init__(self, g: DeviceGraph, pd: PlanData,
                  cfg: EngineConfig, exch: ExchangeBackend,
                  cache: AdjCache | None | str = "auto",
-                 exec_cache="auto"):
+                 exec_cache="auto", tracer=NULL_TRACER):
         self.g = g
         self.pd, self.exch = pd, exch
         self.cfg = cfg
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.cache = build_cache(cfg, g) if cache == "auto" else cache
         self.exec_cache = (build_exec_cache(cfg) if exec_cache == "auto"
                            else exec_cache)
@@ -221,6 +230,8 @@ class StageRunner:
         self._hits_pending = 0.0  # store hits awaiting wave attribution
         self._plan_repr = repr(pd)
         self._prewarm_threads: list[threading.Thread] = []
+        self._tl = threading.local()   # per-thread last-resolve source
+                                       # ("slot" | "store" | "compile")
 
     @property
     def n_units(self) -> int:
@@ -304,9 +315,13 @@ class StageRunner:
                     self._slots[skey] = ev
                     break
                 if not isinstance(entry, threading.Event):
+                    self._tl.last = "slot"
                     return entry
             entry.wait()
         fn = None
+        tr = self.tracer
+        t0_us = tr.now_us() if tr.enabled else 0.0
+        source = "compile"
         try:
             ctx = digest = None
             if self.exec_cache is not None:
@@ -315,6 +330,7 @@ class StageRunner:
                 digest = self.exec_cache.digest(key, sig, ctx)
                 fn = self.exec_cache.load(digest, sig, ctx)
                 if fn is not None:
+                    source = "store"
                     with self._lock:
                         self._hits_pending += 1.0
             if fn is None:
@@ -326,6 +342,18 @@ class StageRunner:
                     self.compile_s += dt
                 if self.exec_cache is not None:
                     self.exec_cache.store(digest, sig, ctx, fn)
+            self._tl.last = source
+            if tr.enabled:
+                # resolve work (store deserialization or XLA compile) on the
+                # prewarm lane when it ran on the background pre-warm thread,
+                # else on the scheduler lane — all args are host scalars
+                tid = (TRACK_PREWARM
+                       if threading.current_thread().name
+                       == "rads-stage-prewarm" else TRACK_SCHED)
+                stage = key if isinstance(key, str) else ":".join(
+                    str(k) for k in key)
+                tr.complete(f"resolve:{stage}", tid, t0_us, source=source,
+                            frontier_cap=cfg.frontier_cap)
             return fn
         finally:
             with self._lock:
@@ -480,13 +508,16 @@ class StageRunner:
             return 0
         gen = self._gen
         cfg = self.cfg
-        n = self._prewarm_ladder(scap, local_only, cfg, gen)
-        for _ in range(max(0, int(escalation_rungs))):
-            if n == 0 or cfg.frontier_cap >= _MAX_CAP:
-                break
-            cfg = self._escalated(cfg)
-            r = self._prewarm_ladder(scap, local_only, cfg, gen)
-            n = n + r if r else n
+        with self.tracer.span("prewarm", TRACK_PREWARM, scap=int(scap),
+                              local_only=bool(local_only),
+                              rungs=int(escalation_rungs)):
+            n = self._prewarm_ladder(scap, local_only, cfg, gen)
+            for _ in range(max(0, int(escalation_rungs))):
+                if n == 0 or cfg.frontier_cap >= _MAX_CAP:
+                    break
+                cfg = self._escalated(cfg)
+                r = self._prewarm_ladder(scap, local_only, cfg, gen)
+                n = n + r if r else n
         return n
 
     def prewarm_async(self, scap: int, local_only: bool,
@@ -531,16 +562,32 @@ class _Wave:
     bufs: object = None
     fin: object = None
     t_start: float = field(default_factory=time.perf_counter)
+    seq: int = 0                # wave sequence number == trace flow id
+    tid: int = 0                # trace lane (TRACK_WAVE0 + lane), 0 = untraced
+    t0_us: float = 0.0          # span-clock admit time (traced runs only)
 
 
 class PipelineScheduler:
     """Drives region-group waves through the staged engine with up to
-    ``cfg.pipeline_depth`` waves in flight (see module docstring)."""
+    ``cfg.pipeline_depth`` waves in flight (see module docstring).
 
-    def __init__(self, runner: StageRunner, stats: dict, consume):
+    ``stats`` may be a plain dict or a
+    :class:`repro.obs.metrics.MetricsRegistry` (a ``MutableMapping``) —
+    the scheduler only reads/writes mapping keys.  ``tracer`` defaults to
+    the runner's (itself :data:`repro.obs.trace.NULL_TRACER` unless the
+    caller injected a recorder); every hot-loop record site is guarded by
+    ``tracer.enabled`` so the off path runs zero instrumentation."""
+
+    def __init__(self, runner: StageRunner, stats: dict, consume,
+                 tracer=None):
         self.runner = runner
         self.stats = stats
         self.consume = consume      # (rows, alive, counts, st, phase) -> None
+        self.tracer = (tracer if tracer is not None
+                       else getattr(runner, "tracer", NULL_TRACER))
+        self._wave_seq = 0          # monotone wave counter (trace flow ids)
+        self._free_lanes: list[int] = []
+        self._n_lanes = 0
 
     # -- wave formation ----------------------------------------------------- #
     def _next_wave(self, queues: list[GroupQueue], retry: list,
@@ -571,6 +618,10 @@ class PipelineScheduler:
                             if stolen is not None:
                                 wave[t] = stolen
                                 self.stats["steal_events"] += 1
+                                if self.tracer.enabled:
+                                    self.tracer.instant(
+                                        "steal", TRACK_SCHED, dev=t,
+                                        victim=src, seeds=len(stolen))
             else:
                 return None
             if max((len(b) for b in wave), default=0) == 0:
@@ -583,13 +634,35 @@ class PipelineScheduler:
     def _admit(self, wave: list[np.ndarray], scap: int) -> _Wave:
         g = self.runner.g
         seeds, mask = _pad_seeds(wave, g.ndev, scap, g.n)
+        tr = self.tracer
+        if not tr.enabled:
+            state = self.runner.init(seeds, mask)
+            stages = [(kind, ui) for ui in range(self.runner.n_units)
+                      for kind in ("fetch", "expand", "verify")]
+            return _Wave(batches=wave, mask=mask, state=state, stages=stages)
+        # traced admission: allocate the smallest free wave lane, open the
+        # whole-life flow (dispatch -> retire arrow) inside the init span
+        if self._free_lanes:
+            lane = min(self._free_lanes)
+            self._free_lanes.remove(lane)
+        else:
+            lane = self._n_lanes
+            self._n_lanes += 1
+        seq = self._wave_seq
+        self._wave_seq += 1
+        tid = TRACK_WAVE0 + lane
+        tr.name_track(tid, f"wave lane {lane}")
+        t0 = tr.now_us()
         state = self.runner.init(seeds, mask)
+        tr.flow_start(seq, tid)
+        tr.complete("init", tid, t0, wave=seq,
+                    seeds=int(sum(len(b) for b in wave)), scap=int(scap))
         stages = [(kind, ui) for ui in range(self.runner.n_units)
                   for kind in ("fetch", "expand", "verify")]
-        return _Wave(batches=wave, mask=mask, state=state, stages=stages)
+        return _Wave(batches=wave, mask=mask, state=state, stages=stages,
+                     seq=seq, tid=tid, t0_us=t0)
 
-    def _dispatch(self, w: _Wave, local_only: bool):
-        kind, ui = w.stages[w.pos]
+    def _dispatch_one(self, kind: str, ui: int, w: _Wave, local_only: bool):
         if kind == "fetch":
             w.state, w.bufs = self.runner.fetch(ui, w.state, local_only)
         elif kind == "expand":
@@ -597,6 +670,24 @@ class PipelineScheduler:
             w.bufs = None
         else:
             w.state = self.runner.verify(ui, w.state, local_only)
+
+    def _dispatch(self, w: _Wave, local_only: bool):
+        kind, ui = w.stages[w.pos]
+        tr = self.tracer
+        if tr.enabled:
+            # per-stage span on the wave's lane, annotated with unit, caps
+            # rung, and how the executable resolved (slot/store/compile) —
+            # every argument is a pre-fetched host scalar (dispatch returns
+            # futures; nothing here blocks on the device)
+            name = f"{kind}:u{ui}"
+            t0 = tr.now_us()
+            with tr.device_span(name):
+                self._dispatch_one(kind, ui, w, local_only)
+            tr.complete(name, w.tid, t0, wave=w.seq, unit=ui,
+                        frontier_cap=self.runner.cfg.frontier_cap,
+                        exec=getattr(self.runner._tl, "last", "slot"))
+        else:
+            self._dispatch_one(kind, ui, w, local_only)
         w.pos += 1
 
     def _drain(self, w: _Wave, local_only: bool):
@@ -616,7 +707,15 @@ class PipelineScheduler:
         while w.pos < len(w.stages):
             self._dispatch(w, local_only)
         if w.fin is None:
-            w.fin = self.runner.finalize(w.state, self.runner.take_hits())
+            tr = self.tracer
+            if tr.enabled:
+                t0 = tr.now_us()
+                w.fin = self.runner.finalize(w.state,
+                                             self.runner.take_hits())
+                tr.complete("finalize", w.tid, t0, wave=w.seq)
+            else:
+                w.fin = self.runner.finalize(w.state,
+                                             self.runner.take_hits())
 
     # -- retire + robustness loop ------------------------------------------- #
     def _retire(self, w: _Wave, retry: list, phase: str
@@ -630,7 +729,19 @@ class PipelineScheduler:
         # host-side ops behind the whole device queue (the old async<=sync
         # failure mode); the old scattered reads (bool(complete), eight
         # scalar float() casts in the driver's consume) stay batched too.
+        tr = self.tracer
+        t0 = tr.now_us() if tr.enabled else 0.0
         rows, alive, counts, complete, st = jax.device_get(w.fin)
+        if tr.enabled and w.tid:
+            # flow end binds (bp="e") to the enclosing retire span on the
+            # retire track — Perfetto draws the dispatch->retire arrow; the
+            # wave-summary span closes the wave's whole lane life
+            tr.flow_end(w.seq, TRACK_RETIRE)
+            tr.complete("retire", TRACK_RETIRE, t0, wave=w.seq,
+                        complete=bool(complete))
+            tr.complete("wave", w.tid, w.t0_us, wave=w.seq,
+                        complete=bool(complete))
+            self._free_lanes.append(w.tid - TRACK_WAVE0)
         if not complete:
             # a discarded wave's stats never reach consume — hand its
             # persistent-store hit credit back so the run total stays exact
@@ -640,10 +751,15 @@ class PipelineScheduler:
                     raise RuntimeError("capacity ceiling reached")
                 self.stats["cap_escalations"] += 1
                 retry.append(w.batches)
+                if tr.enabled:
+                    tr.instant("cap_escalation", TRACK_SCHED, wave=w.seq,
+                               frontier_cap=self.runner.cfg.frontier_cap)
             else:
                 self.stats["overflow_retries"] += 1
                 retry.append([b[len(b) // 2:] for b in w.batches])
                 retry.append([b[:len(b) // 2] for b in w.batches])
+                if tr.enabled:
+                    tr.instant("overflow_split", TRACK_SCHED, wave=w.seq)
             return 0.0, 0
         # per-real-seed trie-node counts (padding slots masked) — consumers
         # use these for the persisted node_counts histogram (priors v2)
@@ -688,7 +804,13 @@ class PipelineScheduler:
         inflight: deque[_Wave] = deque()
         cost_sum, cost_n = 0.0, 0
         waves_done, wave_s_phase = 0, 0.0
+        tr = self.tracer
+        if tr.enabled:
+            tr.name_track(TRACK_SCHED, "scheduler")
+            tr.name_track(TRACK_RETIRE, "retire")
+            tr.name_track(TRACK_PREWARM, "prewarm")
         t0 = time.perf_counter()
+        tp0 = now_us()     # span clock — same domain as every trace event
         while True:
             # 1. fill the pipeline to ``depth``: each admitted wave
             #    dispatches ALL its stages plus its jitted finalize
@@ -698,7 +820,15 @@ class PipelineScheduler:
             #    loop) therefore overlaps wave k's already-dispatched
             #    device compute.
             while len(inflight) < depth:
-                wave = self._next_wave(queues, retry, scap, local_only)
+                if tr.enabled:
+                    # spans the lazy Algorithm-3 GroupQueue._form pull
+                    # (plus steal decisions) feeding the next admission
+                    t0g = tr.now_us()
+                    wave = self._next_wave(queues, retry, scap, local_only)
+                    tr.complete("group_form", TRACK_SCHED, t0g,
+                                got=wave is not None)
+                else:
+                    wave = self._next_wave(queues, retry, scap, local_only)
                 if wave is None:
                     break
                 w = self._admit(wave, scap)
@@ -734,4 +864,13 @@ class PipelineScheduler:
         self.stats[f"{phase}_pipeline_s"] = (
             self.stats.get(f"{phase}_pipeline_s", 0.0)
             + time.perf_counter() - t0)
+        # per-phase wall on the span clock (satellite: honest dist wall) —
+        # recorded unconditionally so `wall_us` exists with tracing off and
+        # max-merges across processes in merge_process_stats
+        wall = now_us() - tp0
+        self.stats[f"{phase}_wall_us"] = (
+            self.stats.get(f"{phase}_wall_us", 0.0) + wall)
+        if tr.enabled:
+            tr.complete(f"phase:{phase}", TRACK_SCHED, tp0, dur_us=wall,
+                        depth=depth, local_only=bool(local_only))
         return cost_sum / cost_n if cost_n else None

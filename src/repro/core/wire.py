@@ -570,3 +570,17 @@ def resolve_wire_format(requested: str, mode: str, prior: dict | None = None,
     if len(have) == 1:
         return ("varint" if have[0] == "raw" else "raw"), "explore"
     return ("varint" if mode in ("spmd", "dist") else "raw"), "heuristic"
+
+
+def register_wire_metrics(reg, chosen: str, requested: str,
+                          reason: str) -> None:
+    """Set the wire-codec instruments on a stats registry (declared in
+    :mod:`repro.obs.schema`): the format actually on the wire
+    (``wire_format``), what the config asked for
+    (``wire_format_requested``), why auto-selection picked it
+    (``wire_auto_reason``), and the modeled compressed-fetch baseline
+    accumulator (``bytes_fetch_compressed``) the per-wave stats add into."""
+    reg["wire_format"] = chosen
+    reg["wire_format_requested"] = requested
+    reg["wire_auto_reason"] = reason
+    reg["bytes_fetch_compressed"] = 0.0

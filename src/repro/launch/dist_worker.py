@@ -78,7 +78,25 @@ def build_argparser():
     ap.add_argument("--region-budget", type=int, default=0)
     ap.add_argument("--out", default="",
                     help="write {count, wall_s, stats} JSON here")
+    ap.add_argument("--trace", default="",
+                    help="write this process's Chrome trace-event JSON "
+                         "(with >1 process the process id is inserted "
+                         "before the extension: out.json -> out.p0.json; "
+                         "merge lanes with `python -m tools.merge_traces`)")
+    ap.add_argument("--metrics-out", default="",
+                    help="export this process's metrics registry (*.prom = "
+                         "Prometheus textfile, else JSON; per-process path "
+                         "derivation as for --trace)")
     return ap
+
+
+def _per_process_path(path: str, process_id: int, nproc: int) -> str:
+    """launch_local hands every worker identical args, so per-process
+    artifact paths derive from the shared one: ``t.json -> t.p2.json``."""
+    if nproc <= 1:
+        return path
+    root, ext = os.path.splitext(path)
+    return f"{root}.p{process_id}{ext or '.json'}"
 
 
 def worker_config(args):
@@ -137,9 +155,16 @@ def main(argv=None) -> int:
                    method=args.partition)
     cfg = worker_config(args)
     mesh = make_engine_mesh(args.num_processes)
+    tracer = None
+    if args.trace:
+        from repro.obs import TraceRecorder
+
+        # the Chrome pid lane IS the process index — merged traces keep
+        # one lane group per process (see repro.obs dist merge contract)
+        tracer = TraceRecorder(pid=args.process_id)
     t0 = time.perf_counter()
     res = rads_enumerate(pg, pattern, cfg, mode="dist", mesh=mesh,
-                         return_embeddings=False)
+                         return_embeddings=False, tracer=tracer)
     wall_s = time.perf_counter() - t0
     payload = dict(count=int(res.count), wall_s=wall_s,
                    process_id=args.process_id,
@@ -149,10 +174,21 @@ def main(argv=None) -> int:
     if args.out:
         with open(args.out, "w") as f:
             json.dump(payload, f, default=float)
+    if tracer is not None:
+        tracer.save(_per_process_path(args.trace, args.process_id,
+                                      args.num_processes))
+    if args.metrics_out:
+        mpath = _per_process_path(args.metrics_out, args.process_id,
+                                  args.num_processes)
+        if mpath.endswith(".prom"):
+            res.registry.export_prometheus(mpath)
+        else:
+            res.registry.export_json(mpath)
     print(f"[dist] p{args.process_id}/{args.num_processes} "
           f"{args.dataset}/{args.query}: count={res.count} "
           f"wall={wall_s:.2f}s wire="
-          f"{res.stats['bytes_wire_fetch'] + res.stats['bytes_wire_verify']:.0f}B")
+          f"{res.stats['bytes_wire_fetch'] + res.stats['bytes_wire_verify']:.0f}B | "
+          + res.registry.summary(("wall_us", "compiles", "comm_pipeline")))
     return 0
 
 

@@ -62,6 +62,14 @@ def main():
     ap.add_argument("--priors", default="",
                     help="JSON cache of per-(pattern, graph) capacity/cost "
                          "priors; preloaded before and updated after the run")
+    ap.add_argument("--trace", default="",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(wave lanes, stage spans, dispatch->retire flow "
+                         "arrows; load in Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics-out", default="",
+                    help="export the typed metrics registry after the run: "
+                         "*.prom = Prometheus textfile format, anything "
+                         "else = JSON document with kind/unit/desc")
     args = ap.parse_args()
     depth = args.pipeline_depth if args.pipeline_depth == "auto" \
         else int(args.pipeline_depth)
@@ -100,11 +108,24 @@ def main():
     if args.mode == "spmd":
         from repro.launch.mesh import make_engine_mesh
         mesh = make_engine_mesh(args.ndev)
+    tracer = None
+    if args.trace:
+        from repro.obs import TraceRecorder
+        tracer = TraceRecorder(jax_bridge=True)
     t0 = time.perf_counter()
     res = rads_enumerate(pg, pattern, cfg, mode=args.mode, mesh=mesh,
-                         return_embeddings=False)
+                         return_embeddings=False, tracer=tracer)
     dt = time.perf_counter() - t0
     st = res.stats
+    if tracer is not None:
+        print(f"[enum] trace: {tracer.save(args.trace)} "
+              f"({tracer.n_recorded} events, {tracer.n_dropped} dropped)")
+    if args.metrics_out:
+        if args.metrics_out.endswith(".prom"):
+            res.registry.export_prometheus(args.metrics_out)
+        else:
+            res.registry.export_json(args.metrics_out)
+        print(f"[enum] metrics: {args.metrics_out}")
     print(f"[enum] {res.count} embeddings in {dt:.2f}s | "
           f"SM-E seeds {st['n_sme_seeds']} dist seeds {st['n_dist_seeds']} | "
           f"fetchV {st['bytes_fetch']/1e6:.2f}MB verifyE "
@@ -113,13 +134,12 @@ def main():
     print(f"[enum] storage {st['storage_format']}: "
           f"adj {st['peak_adj_bytes'] / 1e6:.2f}MB on device | "
           f"priors preloaded {st['priors_preloaded']}")
-    print(f"[enum] compile: {st['compiles']} stage traces "
-          f"({st['compile_s']:.2f}s) | executable store "
-          f"{'on' if st['exec_cache_enabled'] else 'off'}"
-          + (f", {st['exec_cache']['hits']} loads / "
-             f"{st['exec_cache']['stores']} stores"
-             if "exec_cache" in st else "")
-          + f" | prewarm {'on' if cfg.prewarm else 'off'}")
+    # the compile/store line is rendered by the registry itself (typed
+    # units) instead of hand formatting each key
+    print("[enum] " + res.registry.summary(
+        ("compiles", "compile_s", "compile_cache_hits",
+         "exec_cache_enabled", "exec_cache", "wall_us"))
+        + f" | prewarm {'on' if cfg.prewarm else 'off'}")
     print(f"[enum] wire {st['wire_format']}"
           + (f" (requested {st['wire_format_requested']}, "
              f"{st['wire_auto_reason']})"

@@ -1,0 +1,94 @@
+"""Observability for the RADS engine: wave tracing + a typed metrics registry.
+
+This package is the design note for the subsystem (ISSUE 9).  It has two
+halves — **tracing** (:mod:`repro.obs.trace`) and **metrics**
+(:mod:`repro.obs.metrics` + the declared schema in
+:mod:`repro.obs.schema`) — joined by one rule: *observability must cost
+nothing when off and must never perturb the engine when on*.
+
+Ring-buffer layout
+------------------
+:class:`TraceRecorder` preallocates a fixed-size Python list of record
+slots at construction; recording a span is one small-tuple build and one
+``ring[n % cap]`` store — O(1), no growth, no allocation of container
+state in the hot loop.  When the ring wraps, the *oldest* records are
+silently dropped and the drop count is reported in the exported JSON
+(``otherData.dropped_records``), so a truncated trace is detectable, not
+misleading.  Records are ``(ph, name, tid, ts_us, dur_us, flow_id,
+args)`` tuples; export unrolls the ring in record order and emits Chrome
+trace-event dicts (every event carries ``ph/ts/pid/tid``) that load
+directly in Perfetto / ``chrome://tracing``.
+
+Clock domain
+------------
+Every timestamp comes from :func:`now_us` — monotonic
+``time.perf_counter_ns`` anchored at module import.  The scheduler's
+per-phase ``*_wall_us`` stats are measured with the *same* function, so
+the timeline, the stats dict, and the ``wall_skew`` benchmark column are
+in one clock domain by construction; there is no wall-vs-span
+reconciliation step.  Under ``dist`` each process has its own anchor —
+lanes are internally consistent per process, and the merged view keeps
+one process group per ``pid`` rather than pretending cross-process
+clocks align.
+
+Off-path guarantees
+-------------------
+The scheduler and runner hold :data:`NULL_TRACER` (a no-op singleton
+with ``enabled = False``) unless a real recorder is injected, and every
+hot-loop record site is guarded by ``if tracer.enabled`` — with tracing
+off, the wave loop executes *zero* instrumentation code beyond one
+attribute test, which is what makes tracing-off byte-identical to
+tracing-on in counts and ``bytes_wire_*`` (gated in
+``tests/test_obs.py``).  Recording takes **pre-fetched host scalars
+only**: no method on the recorder ever touches a device value, so
+instrumentation cannot introduce an RL001 host sync — the recorder's
+methods are listed in ``[tool.radslint] hot_loops`` to keep that
+machine-checked.
+
+Metrics: one source of truth behind ``stats``
+---------------------------------------------
+:class:`MetricsRegistry` is a ``MutableMapping`` of typed
+:class:`Instrument` declarations (counter / gauge / info / histogram
+with unit + description).  The driver builds its per-run ``stats``
+object from :func:`repro.obs.schema.build_driver_registry` — every
+existing ``stats["k"] += v`` call site keeps working unchanged, but the
+keys now have a declared schema that radslint's RL004 metric extension
+lints against the exporters and benchmark columns.  Subsystems
+(exchange backends, :class:`~repro.core.cache.AdjCache`, wire codecs,
+the executable store) *register* their instruments through
+``register_metrics`` hooks instead of poking dict keys blind.
+Exporters: :meth:`MetricsRegistry.export_json` (typed document) and
+:meth:`MetricsRegistry.export_prometheus` (textfile-collector format).
+
+Dist merge contract
+-------------------
+Traces: each process records into its own file with its process index
+as the Chrome ``pid``; merging is pure concatenation
+(:func:`merge_traces`, CLI ``python -m tools.merge_traces``) — lanes
+stay grouped per process.  Metrics: the registry is per-process;
+``to_stats()`` snapshots a plain dict which crosses the process
+boundary and feeds ``merge_process_stats`` byte-wise unchanged (logical
+stats must be identical across processes — that assertion is the
+determinism gate), while per-process ``wall_us`` is **max-merged** and
+reported as ``per_process_wall_us`` + ``wall_skew`` so multi-host wall
+clock is honest instead of descriptive.
+
+Import-order note: this package imports nothing from ``repro.core``
+(``jax`` is imported lazily only inside ``device_span``), so every core
+module may import it without cycles.
+"""
+from __future__ import annotations
+
+from repro.obs.metrics import (COUNTER, GAUGE, HISTOGRAM, INFO, UNSET,
+                               Instrument, MetricsRegistry)
+from repro.obs.schema import build_driver_registry
+from repro.obs.trace import (NULL_TRACER, TRACK_PREWARM, TRACK_RETIRE,
+                             TRACK_SCHED, TRACK_WAVE0, NullTracer,
+                             TraceRecorder, merge_traces, now_us)
+
+__all__ = [
+    "COUNTER", "GAUGE", "HISTOGRAM", "INFO", "UNSET",
+    "Instrument", "MetricsRegistry", "build_driver_registry",
+    "NULL_TRACER", "NullTracer", "TraceRecorder", "merge_traces", "now_us",
+    "TRACK_SCHED", "TRACK_RETIRE", "TRACK_PREWARM", "TRACK_WAVE0",
+]

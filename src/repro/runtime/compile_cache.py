@@ -93,9 +93,27 @@ from dataclasses import dataclass, field
 import jax
 
 from repro import compat
+from repro.obs.metrics import COUNTER, Instrument, MetricsRegistry
 
 __all__ = ["StageExecCache", "arg_signature", "code_fingerprint",
            "stage_context", "build_exec_cache"]
+
+
+def _store_stats_registry() -> MetricsRegistry:
+    """The store's typed counter set.  Declared here — not in
+    :mod:`repro.obs.schema` — because these are registry-internal to the
+    executable store and surface upward only as deltas through the single
+    top-level ``exec_cache`` instrument; values start at 0 (not UNSET) so
+    ``dict(cache.stats)`` and counter-delta arithmetic see every key."""
+    reg = MetricsRegistry(Instrument(n, COUNTER, "", d) for n, d in (
+        ("hits", "entries loaded (memo or disk)"),
+        ("misses", "lookups with no entry"),
+        ("stores", "fresh executables persisted"),
+        ("errors", "corrupt/stale/unserializable entries degraded"),
+        ("evictions", "LRU garbage-collected envelopes")))
+    for ins in reg.instruments():
+        reg[ins.name] = 0
+    return reg
 
 _ENVELOPE_VERSION = 1
 _SUFFIX = ".stagex"
@@ -206,8 +224,7 @@ class StageExecCache:
 
     path: str
     budget_bytes: int = 0
-    stats: dict = field(default_factory=lambda: dict(
-        hits=0, misses=0, stores=0, errors=0, evictions=0))
+    stats: MetricsRegistry = field(default_factory=_store_stats_registry)
 
     def __post_init__(self):
         self.path = os.path.abspath(self.path)

@@ -1,0 +1,21 @@
+"""RL004 metric-extension fixture: a declared schema with one orphan.
+
+``n_waves`` and ``wall_us`` appear in ``consumer.py`` / this package's
+exporter stand-ins; ``orphan_gauge`` is declared but surfaced nowhere —
+the metric half of RL004 must flag exactly it.
+"""
+
+
+def counter(name, unit="", desc=""):
+    return (name, "counter", unit, desc)
+
+
+def gauge(name, unit="", desc=""):
+    return (name, "gauge", unit, desc)
+
+
+SCHEMA = (
+    counter("bytes_fetch", "bytes", "consumed in consumer.py"),
+    counter("cache_hits", "", "consumed in consumer.py"),
+    gauge("orphan_gauge", "", "declared but never exported anywhere"),
+)

@@ -1,0 +1,268 @@
+"""Observability layer: ring-buffer span recorder determinism, Chrome
+trace-event schema validity (Perfetto-loadable, flow arrows pair up),
+metrics-registry schema completeness, the zero-overhead-when-off gate
+(tracing on vs off is byte-identical in counts and wire bytes), exporter
+well-formedness, and dist wall-clock honesty through the stats merge."""
+import json
+
+import pytest
+
+from repro.configs.rads import QUERIES, EngineConfig
+from repro.core import Pattern, rads_enumerate
+from repro.core.driver import merge_process_stats
+from repro.graph import erdos_graph, partition
+from repro.obs import (COUNTER, GAUGE, Instrument, MetricsRegistry,
+                       NULL_TRACER, TRACK_PREWARM, TRACK_RETIRE, TRACK_SCHED,
+                       TRACK_WAVE0, TraceRecorder, build_driver_registry,
+                       merge_traces)
+
+CFG = EngineConfig(frontier_cap=1 << 13, fetch_cap=512, verify_cap=2048,
+                   region_group_budget=64, enable_sme=False)
+
+
+# --------------------------------------------------------------------------- #
+# recorder unit behavior
+# --------------------------------------------------------------------------- #
+def test_ring_overflow_drops_oldest():
+    tr = TraceRecorder(capacity=8)
+    for i in range(12):
+        tr.instant(f"ev{i}", TRACK_SCHED)
+    assert tr.n_recorded == 12
+    assert tr.n_dropped == 4
+    recs = tr.records()
+    assert len(recs) == 8
+    # oldest surviving record is ev4; order is preserved
+    assert [r[1] for r in recs] == [f"ev{i}" for i in range(4, 12)]
+
+
+def test_span_nesting_records_inner_first_and_stays_monotone():
+    tr = TraceRecorder()
+    with tr.span("outer", TRACK_SCHED, depth=2):
+        with tr.span("inner", TRACK_SCHED):
+            pass
+    recs = tr.records()
+    assert [r[1] for r in recs] == ["inner", "outer"]   # exit order
+    (_, _, _, its, idur, _, _), (_, _, _, ots, odur, _, oargs) = recs
+    assert ots <= its and its + idur <= ots + odur + 1e-6
+    assert oargs == {"depth": 2}
+
+
+def test_null_tracer_is_inert():
+    assert NULL_TRACER.enabled is False
+    with NULL_TRACER.span("x", TRACK_SCHED):
+        pass
+    with NULL_TRACER.device_span("x"):
+        pass
+    NULL_TRACER.complete("x", 1, 0.0)
+    NULL_TRACER.instant("x", 1)
+    NULL_TRACER.flow_start(0, 1)
+    NULL_TRACER.flow_end(0, 1)
+
+
+def test_merge_traces_concatenates_and_sums_drops():
+    docs = []
+    for pid in range(2):
+        tr = TraceRecorder(capacity=8, pid=pid)
+        for i in range(10):
+            tr.instant(f"p{pid}e{i}", TRACK_SCHED)
+        docs.append(tr.to_chrome())
+    merged = merge_traces(docs)
+    pids = {ev["pid"] for ev in merged["traceEvents"]}
+    assert pids == {0, 1}
+    assert merged["otherData"]["dropped_records"] == 4
+    assert merged["otherData"]["merged_processes"] == 2
+
+
+# --------------------------------------------------------------------------- #
+# a real traced run (shared fixture: one traced + one untraced enumeration)
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def traced_run():
+    g = erdos_graph(150, 5.0, seed=3)
+    pg = partition(g, 4, method="bfs")
+    pat = Pattern.from_edges(QUERIES["q1"])
+    tracer = TraceRecorder()
+    on = rads_enumerate(pg, pat, CFG, mode="sim", return_embeddings=False,
+                        tracer=tracer)
+    off = rads_enumerate(pg, pat, CFG, mode="sim", return_embeddings=False)
+    return tracer, on, off
+
+
+def test_tracing_off_is_byte_identical(traced_run):
+    """The zero-overhead contract: the recorder only observes — every
+    count and wire byte is identical with tracing on vs off."""
+    _, on, off = traced_run
+    assert on.count == off.count
+    for k in ("n_waves", "n_groups", "bytes_fetch", "bytes_verify",
+              "bytes_wire_fetch", "bytes_wire_verify", "cache_hits",
+              "cache_probes", "overflow_retries", "cap_escalations"):
+        assert on.stats[k] == off.stats[k], k
+
+
+def test_chrome_schema_valid(traced_run):
+    tracer, _, _ = traced_run
+    doc = tracer.to_chrome()
+    assert doc["displayTimeUnit"] == "ms"
+    assert doc["otherData"]["dropped_records"] == 0
+    for ev in doc["traceEvents"]:
+        assert {"name", "ph", "ts", "pid", "tid"} <= set(ev), ev
+        if ev["ph"] == "X":
+            assert "dur" in ev and ev["dur"] >= 0.0
+        elif ev["ph"] == "i":
+            assert ev["s"] == "t"
+        elif ev["ph"] in ("s", "f"):
+            assert isinstance(ev["id"], int)
+    json.dumps(doc)   # JSON-serializable end to end
+
+
+def test_flow_arrows_pair_and_land_in_retire_spans(traced_run):
+    tracer, on, _ = traced_run
+    evs = tracer.events()
+    starts = {ev["id"]: ev for ev in evs if ev["ph"] == "s"}
+    ends = {ev["id"]: ev for ev in evs if ev["ph"] == "f"}
+    assert set(starts) == set(ends)
+    assert len(starts) == on.stats["n_waves"]   # one arrow per wave
+    retires = [ev for ev in evs
+               if ev["ph"] == "X" and ev["name"] == "retire"]
+    assert len(retires) == on.stats["n_waves"]
+    for fid, fe in ends.items():
+        assert fe["bp"] == "e"
+        assert fe["tid"] == TRACK_RETIRE
+        assert starts[fid]["ts"] <= fe["ts"]
+        # flow end binds to an enclosing retire slice on the same track
+        assert any(r["tid"] == fe["tid"] and
+                   r["ts"] <= fe["ts"] <= r["ts"] + r["dur"]
+                   for r in retires), fid
+        assert starts[fid]["tid"] >= TRACK_WAVE0   # starts on a wave lane
+
+
+def test_track_types_cover_the_pipeline(traced_run):
+    """>= 4 distinct track types: scheduler, retire, prewarm-or-resolve,
+    and per-wave lanes — all named via thread_name metadata."""
+    tracer, on, _ = traced_run
+    evs = tracer.events()
+    named = {ev["tid"]: ev["args"]["name"] for ev in evs
+             if ev["ph"] == "M" and ev["name"] == "thread_name"}
+    assert named.get(TRACK_SCHED) == "scheduler"
+    assert named.get(TRACK_RETIRE) == "retire"
+    assert named.get(TRACK_PREWARM) == "prewarm"
+    lanes = [t for t in named if t >= TRACK_WAVE0]
+    assert lanes and len(named) >= 4
+    by_track = {}
+    for ev in evs:
+        if ev["ph"] == "X":
+            by_track.setdefault(ev["tid"], set()).add(ev["name"])
+    # the scheduler lane carries phase + group-formation spans
+    assert any(n.startswith("phase:") for n in by_track[TRACK_SCHED])
+    assert "group_form" in by_track[TRACK_SCHED]
+    # wave lanes carry the per-stage attribution spans
+    lane_names = set().union(*(by_track.get(t, set()) for t in lanes))
+    assert "init" in lane_names and "finalize" in lane_names
+    assert any(n.startswith("fetch:u") for n in lane_names)
+    assert any(n.startswith("expand:u") for n in lane_names)
+    assert any(n.startswith("verify:u") for n in lane_names)
+    assert "wave" in lane_names                  # the whole-life span
+    # stage spans carry exec-cache attribution
+    stage = [ev for ev in evs if ev["ph"] == "X"
+             and ev["name"].startswith(("fetch:u", "expand:u", "verify:u"))]
+    assert stage and all(
+        ev["args"]["exec"] in ("slot", "store", "compile") for ev in stage)
+
+
+def test_registry_schema_complete(traced_run):
+    """Every stats key a real run emits is a declared instrument — the
+    runtime counterpart of radslint's RL004 metric extension."""
+    _, on, _ = traced_run
+    declared = on.registry.declared_names()
+    undeclared = set(on.stats) - declared
+    assert not undeclared, f"undeclared stats keys: {sorted(undeclared)}"
+    assert set(on.stats) == set(on.registry.to_stats())
+
+
+def test_wall_clock_recorded_without_tracing(traced_run):
+    """Satellite 1: the span-clock phase wall is a stats key, present and
+    positive even when no tracer is attached."""
+    _, on, off = traced_run
+    for st in (on.stats, off.stats):
+        assert st["sme_wall_us"] == 0.0          # enable_sme=False
+        assert st["dist_wall_us"] > 0.0
+        assert st["wall_us"] == st["sme_wall_us"] + st["dist_wall_us"]
+
+
+# --------------------------------------------------------------------------- #
+# metrics registry semantics + exporters
+# --------------------------------------------------------------------------- #
+def test_unset_instruments_absent_from_mapping_view():
+    reg = build_driver_registry()
+    assert "auto_depth" not in reg
+    assert len(reg) == 0
+    reg["n_waves"] = 3
+    assert "n_waves" in reg and reg["n_waves"] == 3
+    assert reg.get("auto_depth") is None
+    with pytest.raises(KeyError):
+        reg["auto_depth"]
+
+
+def test_undeclared_write_auto_registers_untyped_gauge():
+    reg = MetricsRegistry()
+    reg["warm_pipeline_s"] = 0.5
+    ins = {i.name: i for i in reg.instruments()}["warm_pipeline_s"]
+    assert ins.kind == GAUGE and not ins.declared
+    assert reg.inc("adhoc") == 1 and reg.inc("adhoc", 2) == 3
+
+
+def test_redeclaring_kind_raises():
+    reg = MetricsRegistry([Instrument("x", COUNTER)])
+    with pytest.raises(ValueError, match="redeclared"):
+        reg.register(Instrument("x", GAUGE))
+
+
+def test_exporters_well_formed(traced_run, tmp_path):
+    _, on, _ = traced_run
+    reg = on.registry
+    jpath = reg.export_json(str(tmp_path / "m.json"))
+    with open(jpath) as f:
+        doc = json.load(f)
+    assert doc["n_waves"]["kind"] == "counter"
+    assert doc["wall_us"]["unit"] == "us"
+    assert doc["n_waves"]["value"] == on.stats["n_waves"]
+    ppath = reg.export_prometheus(str(tmp_path / "m.prom"))
+    text = open(ppath).read()
+    assert "# TYPE rads_n_waves counter" in text
+    assert f"rads_n_waves {float(on.stats['n_waves']):g}" in text
+    assert 'rads_bytes_wire_fetch_dev{index="0"}' in text
+    assert "rads_info{" in text                   # wire_format et al.
+    for line in text.splitlines():
+        assert line.startswith(("#", "rads_")), line
+
+
+def test_summary_formats_by_unit():
+    reg = MetricsRegistry([Instrument("compile_s", COUNTER, "s"),
+                           Instrument("wall_us", COUNTER, "us"),
+                           Instrument("bytes_fetch", COUNTER, "bytes"),
+                           Instrument("prewarm", GAUGE),
+                           Instrument("auto_depth", GAUGE)])
+    reg["compile_s"] = 1.5
+    reg["wall_us"] = 2_500_000.0
+    reg["bytes_fetch"] = 3_000_000.0
+    reg["prewarm"] = True
+    s = reg.summary(("compile_s", "wall_us", "bytes_fetch", "prewarm",
+                     "auto_depth"))
+    assert s == "compile_s 1.50s | wall_us 2.50s | bytes_fetch 3.0MB | prewarm on"
+
+
+# --------------------------------------------------------------------------- #
+# dist wall-clock honesty through the merge
+# --------------------------------------------------------------------------- #
+def test_merge_process_stats_wall_honesty():
+    base = dict(bytes_wire_fetch=10.0, bytes_wire_verify=4.0, n_waves=3)
+    p0 = dict(base, wall_us=100.0, dist_wall_us=100.0, sme_wall_us=0.0)
+    p1 = dict(base, wall_us=50.0, dist_wall_us=50.0, sme_wall_us=0.0)
+    merged = merge_process_stats([p0, p1])
+    assert merged["wall_us"] == 100.0            # max, not mean
+    assert merged["dist_wall_us"] == 100.0
+    assert merged["per_process_wall_us"] == [100.0, 50.0]
+    assert merged["wall_skew"] == pytest.approx(100.0 / 75.0)
+    # logical divergence still raises (the merge stays an assertion)
+    with pytest.raises(ValueError, match="diverged"):
+        merge_process_stats([p0, dict(p1, n_waves=4)])

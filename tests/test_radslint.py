@@ -108,6 +108,29 @@ def test_rl004_dropped_stat_caught():
                    for f in bad)
 
 
+def test_rl004_orphan_metric_instrument_caught():
+    res = run_fixture(
+        "rl004",
+        metric_schema="rl004.metrics_schema",
+        metric_consumers=[f"{FIX}/rl004/consumer.py"])
+    bad = in_file(res.findings, "rl004/metrics_schema.py", "RL004")
+    assert any("`orphan_gauge`" in f.message and "never exported"
+               in f.message for f in bad)
+    # consumed instruments are clean
+    assert not any("`bytes_fetch`" in f.message or "`cache_hits`"
+                   in f.message for f in bad)
+
+
+def test_pyproject_metric_schema_fully_exported():
+    """The real tree's declared instruments all reach a consumer (the
+    live half of the zero-findings ratchet for the metric extension)."""
+    cfg = load_default_config(REPO)
+    assert cfg.metric_schema == "repro.obs.schema"
+    res = lint_project(cfg, use_baseline=False)
+    assert not [f for f in res.findings
+                if "metric instrument" in f.message], res.render()
+
+
 # --------------------------------------------------------------------------- #
 # RL005 — dtype hygiene
 # --------------------------------------------------------------------------- #

@@ -1,0 +1,46 @@
+"""Merge per-process Chrome trace files into one Perfetto-loadable doc.
+
+``python -m tools.merge_traces -o merged.json trace.p0.json trace.p1.json``
+
+Each ``dist`` worker records with its process index as the Chrome ``pid``
+(see :mod:`repro.obs`), so the merge is pure event concatenation — lanes
+stay grouped per process, and per-file dropped-record counts are summed
+into ``otherData.dropped_records``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="merge per-process Chrome trace JSON files")
+    ap.add_argument("inputs", nargs="+", help="per-process trace files")
+    ap.add_argument("-o", "--out", required=True, help="merged output path")
+    args = ap.parse_args(argv)
+
+    try:
+        from repro.obs.trace import merge_traces
+    except ModuleNotFoundError:   # run from the repo root without PYTHONPATH
+        sys.path.insert(0, os.path.join(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            "src"))
+        from repro.obs.trace import merge_traces
+
+    docs = []
+    for path in args.inputs:
+        with open(path) as f:
+            docs.append(json.load(f))
+    merged = merge_traces(docs)
+    with open(args.out, "w") as f:
+        json.dump(merged, f)
+    print(f"[merge_traces] {args.out}: {len(merged['traceEvents'])} events "
+          f"from {len(docs)} processes")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

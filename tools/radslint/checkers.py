@@ -345,6 +345,10 @@ def check_rl003(ctx: LintContext) -> list[Finding]:
 # RL004 — stat threading
 # --------------------------------------------------------------------------- #
 def check_rl004(ctx: LintContext) -> list[Finding]:
+    return _rl004_stat_fields(ctx) + _rl004_metric_schema(ctx)
+
+
+def _rl004_stat_fields(ctx: LintContext) -> list[Finding]:
     cfg = ctx.cfg
     if not cfg.stat_state or "." not in cfg.stat_state:
         return []
@@ -389,6 +393,45 @@ def check_rl004(ctx: LintContext) -> list[Finding]:
                     f"{relp}",
                     "surface it (driver stats key / benchmark column) or "
                     "drop the field"))
+    return out
+
+
+_METRIC_CTORS = {"counter", "gauge", "info", "histogram"}
+
+
+def _rl004_metric_schema(ctx: LintContext) -> list[Finding]:
+    """Every instrument the metric schema module declares (a literal
+    ``counter("name", ...)`` / ``gauge`` / ``info`` / ``histogram`` call)
+    must be surfaced by at least one configured consumer — the same
+    registry -> exporter -> benchmark-column threading guarantee
+    ``WaveState`` byte counters get from the stat-field half above."""
+    cfg = ctx.cfg
+    if not cfg.metric_schema:
+        return []
+    mod = ctx.index.modules.get(cfg.metric_schema)
+    if mod is None:
+        return []
+    declared: list[tuple[str, int]] = []
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Call) and \
+                isinstance(node.func, ast.Name) and \
+                node.func.id in _METRIC_CTORS and node.args and \
+                isinstance(node.args[0], ast.Constant) and \
+                isinstance(node.args[0].value, str):
+            declared.append((node.args[0].value, node.lineno))
+    blob = "\n".join(
+        (cfg.project_root / relp).read_text()
+        if (cfg.project_root / relp).exists() else ""
+        for relp in cfg.metric_consumers)
+    out: list[Finding] = []
+    for name, ln in declared:
+        if not re.search(rf"\b{re.escape(name)}\b", blob):
+            out.append(Finding(
+                "RL004", mod.rel, ln,
+                f"metric instrument `{name}` is declared but never "
+                "exported by any configured metric consumer",
+                "surface it (registry summary / exporter / benchmark "
+                "column) or drop the declaration"))
     return out
 
 

@@ -41,6 +41,12 @@ class Config:
     stat_field_patterns: list[str] = field(
         default_factory=lambda: [r"^bytes_", r"_hits$", r"_probes$"])
     stat_consumers: list[str] = field(default_factory=list)
+    # RL004 metric extension: the module whose literal counter()/gauge()/
+    # info()/histogram() calls declare the metrics schema, and the
+    # exporter / benchmark files that must surface every declared
+    # instrument (registry -> exporter -> benchmark column)
+    metric_schema: str = ""
+    metric_consumers: list[str] = field(default_factory=list)
     # zero-findings ratchet file
     baseline: str = "tools/radslint/baseline.json"
 
